@@ -1,0 +1,47 @@
+"""Paper Tab. 1 / multi-precision ladder: widening matmul at f32/bf16/fp8.
+
+Occamy's FP64/32/16/8 SIMD ladder maps to the v5e MXU's f32/bf16/fp8 modes
+(DESIGN.md S2.1): each narrowing step doubles peak FLOP/s; accumulation
+always widens to f32 (the ExSdotp pattern). CPU wall times are emulation
+artifacts for narrow types; the TPU-projected peaks are the Tab. 1 row.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import PEAK_FLOPS, row, time_fn
+from repro.core.precision import LADDER, PEAK_MULTIPLIER, policy
+
+M = N = K = 1024
+
+
+def run() -> list:
+    rng = np.random.default_rng(0)
+    rows = []
+    a32 = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    b32 = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    flops = 2 * M * N * K
+    for name in LADDER:
+        pol = policy(name)
+
+        @jax.jit
+        def mm(a, b, pol=pol):
+            return pol.dot(a, b)
+
+        t = time_fn(mm, a32, b32)
+        out = mm(a32, b32)
+        assert out.dtype == jnp.float32, "accumulation must widen to f32"
+        tpu_peak = PEAK_FLOPS["f32"] * PEAK_MULTIPLIER[name]
+        rows.append(row(
+            f"precision/{name}/widening_matmul", t * 1e6,
+            f"cpu_gflops={flops / t / 1e9:.2f};"
+            f"tpu_peak_tflops={tpu_peak / 1e12:.0f};"
+            f"tpu_time_at_peak_us={flops / tpu_peak * 1e6:.2f};"
+            f"accum=f32"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

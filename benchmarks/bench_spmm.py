@@ -1,0 +1,105 @@
+"""Paper Fig. 6b: sparse-dense matrix multiply (SpMM) with / without SUs.
+
+Three variants, mirroring the paper's axes:
+* ``su_bcsr``  -- the SU formulation: the block-column index stream drives
+  block gathers of the dense operand + back-to-back block GEMMs (what the
+  Pallas kernel executes tile-wise on TPU).
+* ``noSU_csr`` -- the scalar-ISA analogue: element-granular CSR with one
+  explicit gather per nonzero + segment-sum (address arithmetic in code).
+* ``dense``    -- dense GEMM reference (utilization denominator).
+
+The paper's matrices are SuiteSparse; offline stand-ins sweep the same
+structure axes (uniform / banded / power-law). FoMs: useful GFLOP/s,
++/-SU speedup (paper: 4.6x), utilization vs dense peak (paper: 42%).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import PEAK_FLOPS, row, time_fn
+from repro.core.formats import (banded_sparse, bcsr_from_dense, csr_from_dense,
+                                powerlaw_sparse, random_dense_sparse)
+from repro.kernels.spmm import ops as spmm_ops
+
+M, K, N = 1024, 1024, 512
+
+
+def _block_uniform(rng, shape, density, block=(8, 8)):
+    """Uniform sparsity at BLOCK granularity: the structured case the TPU
+    re-blocking (DESIGN.md S2.2) is built for."""
+    gm, gn = shape[0] // block[0], shape[1] // block[1]
+    mask = np.kron(rng.random((gm, gn)) < density,
+                   np.ones(block, bool))
+    return np.where(mask, rng.standard_normal(shape), 0).astype(np.float32)
+
+
+import numpy as np  # noqa: E402  (used by _block_uniform)
+
+CASES = [
+    ("uniform_1pct", lambda rng: random_dense_sparse(rng, (M, K), 0.01)),
+    ("uniform_5pct", lambda rng: random_dense_sparse(rng, (M, K), 0.05)),
+    ("blockuniform_5pct", lambda rng: _block_uniform(rng, (M, K), 0.05)),
+    ("blockuniform_20pct", lambda rng: _block_uniform(rng, (M, K), 0.20)),
+    ("banded_bw16", lambda rng: banded_sparse(rng, (M, K), 16)),
+    ("powerlaw_5pct", lambda rng: powerlaw_sparse(rng, (M, K), 0.05)),
+]
+
+
+@jax.jit
+def _su_bcsr(block_rows, block_cols, blocks, b):
+    """Block index stream -> gather dense K-tiles -> batched GEMM -> scatter."""
+    nnzb, bm, bk = blocks.shape
+    K_, N_ = b.shape
+    tiles = b.reshape(K_ // bk, bk, N_)
+    gathered = jnp.take(tiles, block_cols, axis=0)            # SU indirection
+    partial = jnp.einsum("zmk,zkn->zmn", blocks, gathered,
+                         preferred_element_type=jnp.float32)
+    out = jnp.zeros((M // bm, bm, N_), jnp.float32)
+    return out.at[block_rows].add(partial).reshape(M, N_)
+
+
+@jax.jit
+def _nosu_csr(indptr, indices, values, b):
+    """Element-granular gather + segment-sum (the scalar-code analogue)."""
+    rows = jnp.repeat(jnp.arange(M, dtype=jnp.int32), jnp.diff(indptr),
+                      total_repeat_length=indices.shape[0])
+    gathered = jnp.take(b, indices, axis=0) * values[:, None]
+    return jnp.zeros((M, b.shape[1]), jnp.float32).at[rows].add(gathered)
+
+
+@jax.jit
+def _dense(a, b):
+    return a @ b
+
+
+def run() -> list:
+    rng = np.random.default_rng(0)
+    rows = []
+    b = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    for name, gen in CASES:
+        a_dense = gen(rng)
+        a = bcsr_from_dense(a_dense, (8, 8))
+        csr = csr_from_dense(a_dense)
+        t_su = time_fn(_su_bcsr, a.block_rows, a.block_cols, a.blocks, b)
+        t_nosu = time_fn(_nosu_csr, csr.indptr, csr.indices, csr.values, b)
+        t_dense = time_fn(_dense, jnp.asarray(a_dense), b)
+        useful = 2 * csr.nnz * N
+        stream = spmm_ops.flops(a, N)  # includes block zero-padding work
+        rows.append(row(
+            f"spmm/{name}/su_bcsr", t_su * 1e6,
+            f"useful_gflops={useful / t_su / 1e9:.2f};"
+            f"speedup_vs_noSU={t_nosu / t_su:.2f}x;"
+            f"block_density={a.density():.3f};"
+            f"stream_efficiency={useful / max(stream, 1):.2f}"))
+        rows.append(row(f"spmm/{name}/noSU_csr", t_nosu * 1e6,
+                        f"useful_gflops={useful / t_nosu / 1e9:.2f}"))
+        rows.append(row(f"spmm/{name}/dense", t_dense * 1e6,
+                        f"gflops={2 * M * K * N / t_dense / 1e9:.2f};"
+                        f"util_of_dense={(useful / t_su) / (2 * M * K * N / t_dense):.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

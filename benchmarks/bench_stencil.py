@@ -1,0 +1,61 @@
+"""Paper Fig. 6a: FP64 stencils with / without SUs.
+
+Repro mapping: 'with SU' = the streaming shifted-slice formulation (affine
+streams; what the Pallas kernel implements tile-wise); 'without SU' = the
+scalar-ISA analogue (explicit per-tap index arithmetic + gather). Both are
+XLA-compiled; the ratio reproduces the paper's +/-SU contrast (3.9x on
+j3d27pt in silicon). TPU-absolute: FLOPs / bytes / roofline utilization
+derived per stencil (f32 stands in for FP64 per DESIGN.md S2.1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import HBM_BW, PEAK_FLOPS, row, time_fn
+from repro.core.stencils import STENCILS, apply_gather_baseline, apply_reference
+from repro.kernels.stencil import ops as stencil_ops
+
+CASES = [
+    ("j2d5pt", (1024, 1024)),
+    ("j2d9pt", (1024, 1024)),
+    ("j2d9pt-gol", (512, 512)),
+    ("j3d7pt", (64, 64, 256)),
+    ("j3d27pt", (64, 64, 256)),
+]
+
+
+def run() -> list:
+    rng = np.random.default_rng(0)
+    rows = []
+    for name, interior in CASES:
+        spec = STENCILS[name]
+        r = spec.radius
+        grid = jnp.asarray(
+            rng.standard_normal([s + 2 * r for s in interior]), jnp.float32)
+        su = jax.jit(functools.partial(apply_reference, spec))
+        base = jax.jit(functools.partial(apply_gather_baseline, spec))
+        t_su = time_fn(su, grid)
+        t_base = time_fn(base, grid)
+        flops = stencil_ops.flops(spec, tuple(interior))
+        n = int(np.prod(interior))
+        # TPU roofline: one grid read + one write per point (halo amortized),
+        # taps come from VMEM -- arithmetic intensity = flops / 8 bytes.
+        tpu_mem_s = (2 * 4 * n) / HBM_BW
+        tpu_comp_s = flops / PEAK_FLOPS["f32"]
+        util = tpu_comp_s / max(tpu_comp_s, tpu_mem_s)
+        rows.append(row(
+            f"stencil/{name}/su", t_su * 1e6,
+            f"gflops={flops / t_su / 1e9:.2f};speedup_vs_noSU={t_base / t_su:.2f}x;"
+            f"tpu_roofline_util={util:.2f};points={spec.points}"))
+        rows.append(row(
+            f"stencil/{name}/noSU", t_base * 1e6,
+            f"gflops={flops / t_base / 1e9:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,39 @@
+"""Shared benchmark utilities: timing, CSV rows, TPU-referenced derivations.
+
+This container is CPU-only, so wall-clock numbers are XLA-CPU times; they are
+meaningful for *relative* comparisons (the paper's +/-SU contrast), while
+TPU-absolute projections come from the roofline terms (see EXPERIMENTS.md
+SRoofline). Every row carries both.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+# v5e per-chip reference constants (same as launch/dryrun.py)
+PEAK_FLOPS = {"f32": 98.5e12, "bf16": 197e12, "fp8_e4m3": 394e12,
+              "fp8_e5m2": 394e12}
+HBM_BW = 819e9
+# VPU comparator reference: 8x128 lanes x ~0.94 GHz
+VPU_COMPARE_RATE = 8 * 128 * 0.94e9
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (s) of a jitted callable; blocks on results."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

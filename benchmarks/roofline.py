@@ -1,0 +1,91 @@
+"""Roofline aggregator: dry-run JSONs -> the EXPERIMENTS.md SRoofline table.
+
+Per (arch x shape x mesh): the three terms in seconds, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS ratio, peak bytes/device, and a one-line 'what would
+move the dominant term' note (rule-based from the breakdown).
+
+Usage: PYTHONPATH=src:. python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def note_for(rec: dict) -> str:
+    r = rec["roofline"]
+    dom = r["dominant"]
+    coll = rec["hlo"]["collective_bytes"]
+    if dom == "collective_s":
+        top = max(coll, key=coll.get) if coll else "?"
+        return (f"reduce {top} traffic (overlap, bf16 collectives, "
+                f"shard_map attention/MoE)")
+    if dom == "memory_s":
+        return ("cut activation materialization (Pallas flash kernel keeps "
+                "scores in VMEM; CPU lowering also upcasts bf16->f32)")
+    return "compute-bound: raise MXU occupancy (larger tiles, fp8 ladder)"
+
+
+def load(dir_: Path):
+    recs = []
+    for f in sorted(dir_.glob("*.json")):
+        try:
+            recs.append(json.loads(f.read_text()))
+        except Exception:
+            pass
+    return recs
+
+
+def table(recs, mesh="single", variant="base") -> str:
+    rows = ["| arch | shape | compute_s | memory_s | collective_s raw/corr | dominant "
+            "| model/HLO flops | peak GiB/dev | next lever |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh or r.get("variant", "base") != variant:
+            continue
+        rl = r["roofline"]
+        ratio = r["model_flops_per_device"] / max(r["hlo"]["dot_flops"], 1.0)
+        coll_c = rl.get("collective_s_tpu_corrected", rl["collective_s"])
+        rows.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {rl['compute_s']:.3f} | {rl['memory_s']:.3f} "
+            f"| {rl['collective_s']:.3f}/{coll_c:.3f} "
+            f"| {rl['dominant'].replace('_s','')} "
+            f"| {ratio:.2f} "
+            f"| {r['memory']['peak_per_device'] / 2**30:.2f} "
+            f"| {note_for(r)} |")
+    return "\n".join(rows)
+
+
+def summary(recs) -> str:
+    by_key = {}
+    for r in recs:
+        by_key.setdefault((r["mesh"], r.get("variant", "base")), []).append(r)
+    lines = []
+    for (mesh, variant), rs in sorted(by_key.items()):
+        n_fit = sum(1 for r in rs
+                    if r["memory"]["peak_per_device"] < 16 * 2**30)
+        doms = {}
+        for r in rs:
+            doms[r["roofline"]["dominant"]] = doms.get(
+                r["roofline"]["dominant"], 0) + 1
+        lines.append(f"mesh={mesh} variant={variant}: {len(rs)} cells "
+                     f"compiled, {n_fit} fit in 16 GiB HBM, dominants={doms}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variant", default="base", choices=["base", "opt"])
+    args = ap.parse_args()
+    recs = load(Path(args.dir))
+    print(summary(recs))
+    print()
+    print(table(recs, args.mesh, args.variant))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: train a tiny Occamy-style LM end to end on CPU (~1 min).
+
+Shows the public API surface: config -> init -> data pipeline -> fault-
+tolerant trainer -> checkpoint -> greedy decode with KV cache.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.data.pipeline import SyntheticLM
+from repro.launch.train import make_step
+from repro.models import model as M
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    cfg = dataclasses.replace(get_smoke("qwen3-1.7b"), policy="f32")
+    steps = 60
+    opt = AdamW(lr=cosine_schedule(3e-3, warmup=10, total=steps))
+    data = SyntheticLM(cfg, batch=8, seq_len=64, seed=0, noise=0.05)
+    trainer = Trainer(
+        TrainerConfig(total_steps=steps, ckpt_every=25,
+                      ckpt_dir="checkpoints/quickstart", log_every=10),
+        cfg, make_step(cfg, opt), opt, data,
+        init_state=lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    out = trainer.run()
+    first, last = out["history"][0][1], out["history"][-1][1]
+    print(f"\nloss: {first:.3f} -> {last:.3f} "
+          f"({'LEARNED' if last < first - 0.5 else 'check hyperparams'})")
+
+    # greedy decode from the trained model
+    params = out["state"]["params"]
+    prompt = jnp.asarray(data.batch_at(999)["tokens"][:1, :8])
+    logits, cache, pos = M.prefill(params, prompt, cfg, max_seq=24)
+    nxt = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)[:, None].astype(jnp.int32)
+    toks = [int(nxt[0, 0])]
+    for i in range(7):
+        logits, cache = M.decode_step(params, cfg, cache, pos + i, nxt)
+        nxt = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)[:, None].astype(jnp.int32)
+        toks.append(int(nxt[0, 0]))
+    want = [int(data.perm[t]) for t in [int(prompt[0, -1])] + toks[:-1]]
+    hits = sum(a == b for a, b in zip(toks, want))
+    print(f"decoded continuation: {toks}")
+    print(f"next-token rule hits: {hits}/8 (data is a noisy permutation chain)")
+
+
+if __name__ == "__main__":
+    main()

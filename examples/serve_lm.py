@@ -1,0 +1,24 @@
+"""Serving example: batched prefill + KV-cache decode on any assigned arch.
+
+Thin wrapper over the production launcher (repro.launch.serve) pinned to a
+smoke config so it runs on CPU.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch gemma3-12b]
+"""
+import argparse
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-12b")
+    args, _ = ap.parse_known_args()
+    sys.argv = ["serve", "--arch", args.arch, "--smoke", "--batch", "2",
+                "--prompt-len", "24", "--gen", "16"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Default invocation uses a ~10M config so it completes on CPU in minutes;
+pass ``--full`` for the ~100M x 300-step run (hours on CPU; the intended
+host is a TPU slice where the same code path runs under pjit).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--full]
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.data.pipeline import SyntheticLM
+from repro.launch.train import make_step
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def make_cfg(full: bool) -> ArchConfig:
+    if full:  # ~100M params (qwen3-family shape)
+        return ArchConfig(
+            name="lm-100m", family="dense", d_model=640, n_heads=10,
+            n_kv_heads=5, d_ff=1792, vocab_size=32768,
+            block_unit=("attn",), n_repeats=12, head_dim=64,
+            qk_norm=True, policy="f32")
+    return ArchConfig(
+        name="lm-10m", family="dense", d_model=256, n_heads=4,
+        n_kv_heads=2, d_ff=704, vocab_size=8192,
+        block_unit=("attn",), n_repeats=6, head_dim=64,
+        qk_norm=True, policy="f32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--grad-compress-k", type=int, default=0)
+    args = ap.parse_args()
+    cfg = make_cfg(args.full)
+    steps = args.steps or (300 if args.full else 80)
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{steps} steps")
+    opt = AdamW(lr=cosine_schedule(1e-3, warmup=steps // 10, total=steps))
+    data = SyntheticLM(cfg, batch=8, seq_len=256 if args.full else 128,
+                       seed=0, noise=0.05)
+    trainer = Trainer(
+        TrainerConfig(total_steps=steps, ckpt_every=max(25, steps // 4),
+                      ckpt_dir=f"checkpoints/{cfg.name}", log_every=10),
+        cfg, make_step(cfg, opt, args.grad_compress_k), opt, data,
+        init_state=lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    out = trainer.run()
+    hist = out["history"]
+    print(f"\nloss {hist[0][1]:.3f} -> {hist[-1][1]:.3f}; "
+          f"restart-safe checkpoints in checkpoints/{cfg.name}")
+
+
+if __name__ == "__main__":
+    main()

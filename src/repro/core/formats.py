@@ -1,0 +1,240 @@
+"""Sparse tensor containers and generators.
+
+Occamy's SUs consume *sorted index streams* over scratchpad-resident data.
+On TPU the efficient quantum of data movement is a (>=8, >=128) tile, so the
+central format here is **BCSR** (block compressed sparse row): the block-column
+index stream drives which dense tile the DMA engine (the Pallas pipeline)
+fetches next -- the faithful TPU re-granularization of SU indirection.
+
+All containers are registered pytrees with static shape metadata, so they pass
+through ``jax.jit`` unscathed (nnz is fixed at construction time, as required
+for XLA's static shapes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _pytree_dataclass(cls=None, *, static: Tuple[str, ...] = ()):
+    """Register a dataclass as a pytree with ``static`` fields as aux data."""
+
+    def wrap(c):
+        c = dataclasses.dataclass(frozen=True)(c)
+        data_fields = tuple(f.name for f in dataclasses.fields(c) if f.name not in static)
+
+        def flatten(obj):
+            return (
+                tuple(getattr(obj, f) for f in data_fields),
+                tuple(getattr(obj, f) for f in static),
+            )
+
+        def unflatten(aux, children):
+            kwargs = dict(zip(data_fields, children))
+            kwargs.update(dict(zip(static, aux)))
+            return c(**kwargs)
+
+        jax.tree_util.register_pytree_node(c, flatten, unflatten)
+        return c
+
+    return wrap if cls is None else wrap(cls)
+
+
+@_pytree_dataclass(static=("shape",))
+class CSR:
+    """Element-granular CSR; the *reference* format (Occamy's native view)."""
+
+    indptr: jax.Array   # (n_rows + 1,) int32
+    indices: jax.Array  # (nnz,) int32, column ids, sorted within each row
+    values: jax.Array   # (nnz,) float
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return self.values.shape[0]
+
+    def todense(self) -> jax.Array:
+        n_rows, n_cols = self.shape
+        row_ids = jnp.repeat(
+            jnp.arange(n_rows, dtype=jnp.int32),
+            jnp.diff(self.indptr),
+            total_repeat_length=self.nnz,
+        )
+        out = jnp.zeros(self.shape, self.values.dtype)
+        return out.at[row_ids, self.indices].add(self.values)
+
+
+@_pytree_dataclass(static=("shape", "block"))
+class BCSR:
+    """Block-CSR with a *flattened block stream* (megablox-style).
+
+    ``blocks[i]`` is the i-th nonzero (bm, bn) tile in block-row-major order;
+    ``block_rows[i]`` / ``block_cols[i]`` are its block coordinates. This is
+    the index stream handed to the SpMM kernel's scalar prefetch: exactly the
+    SU "index stream drives data stream" contract.
+    """
+
+    indptr: jax.Array      # (n_brows + 1,) int32 -- offsets into the block stream
+    block_rows: jax.Array  # (nnzb,) int32
+    block_cols: jax.Array  # (nnzb,) int32
+    blocks: jax.Array      # (nnzb, bm, bn) float
+    shape: Tuple[int, int]
+    block: Tuple[int, int]
+
+    @property
+    def nnzb(self) -> int:
+        return self.blocks.shape[0]
+
+    @property
+    def grid_shape(self) -> Tuple[int, int]:
+        return (self.shape[0] // self.block[0], self.shape[1] // self.block[1])
+
+    def todense(self) -> jax.Array:
+        bm, bn = self.block
+        gm, gn = self.grid_shape
+        dense = jnp.zeros((gm, gn, bm, bn), self.blocks.dtype)
+        dense = dense.at[self.block_rows, self.block_cols].add(self.blocks)
+        return dense.transpose(0, 2, 1, 3).reshape(self.shape)
+
+    def density(self) -> float:
+        gm, gn = self.grid_shape
+        return self.nnzb / float(gm * gn)
+
+
+@_pytree_dataclass(static=("shape",))
+class SortedCOO:
+    """Sorted coordinate stream: the SU *intersection/union* operand format.
+
+    ``keys = row * n_cols + col`` sorted ascending; values aligned. A fixed
+    capacity with an explicit ``count`` keeps shapes static under jit; slots
+    past ``count`` hold the sentinel key ``INVALID`` (2**31 - 1).
+    """
+
+    keys: jax.Array    # (capacity,) int32, sorted; INVALID-padded
+    values: jax.Array  # (capacity,) float
+    count: jax.Array   # () int32
+    shape: Tuple[int, int]
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+    def todense(self) -> jax.Array:
+        n_rows, n_cols = self.shape
+        valid = jnp.arange(self.capacity) < self.count
+        rows = jnp.where(valid, self.keys // n_cols, 0)
+        cols = jnp.where(valid, self.keys % n_cols, 0)
+        vals = jnp.where(valid, self.values, 0)
+        return jnp.zeros(self.shape, self.values.dtype).at[rows, cols].add(vals)
+
+
+INVALID_KEY = np.int32(2**31 - 1)
+
+
+# ---------------------------------------------------------------------------
+# Converters (host-side, numpy): build static-shaped containers from dense.
+# ---------------------------------------------------------------------------
+
+def csr_from_dense(dense: np.ndarray) -> CSR:
+    dense = np.asarray(dense)
+    n_rows, _ = dense.shape
+    mask = dense != 0
+    indptr = np.zeros(n_rows + 1, np.int32)
+    np.cumsum(mask.sum(axis=1), out=indptr[1:])
+    rows, cols = np.nonzero(mask)
+    return CSR(
+        indptr=jnp.asarray(indptr),
+        indices=jnp.asarray(cols.astype(np.int32)),
+        values=jnp.asarray(dense[rows, cols]),
+        shape=dense.shape,
+    )
+
+
+def bcsr_from_dense(dense: np.ndarray, block: Tuple[int, int]) -> BCSR:
+    dense = np.asarray(dense)
+    bm, bn = block
+    m, n = dense.shape
+    assert m % bm == 0 and n % bn == 0, f"shape {dense.shape} not divisible by block {block}"
+    gm, gn = m // bm, n // bn
+    tiles = dense.reshape(gm, bm, gn, bn).transpose(0, 2, 1, 3)  # (gm, gn, bm, bn)
+    nz = np.abs(tiles).sum(axis=(2, 3)) != 0
+    brows, bcols = np.nonzero(nz)
+    indptr = np.zeros(gm + 1, np.int32)
+    np.cumsum(nz.sum(axis=1), out=indptr[1:])
+    return BCSR(
+        indptr=jnp.asarray(indptr),
+        block_rows=jnp.asarray(brows.astype(np.int32)),
+        block_cols=jnp.asarray(bcols.astype(np.int32)),
+        blocks=jnp.asarray(tiles[brows, bcols]),
+        shape=(m, n),
+        block=block,
+    )
+
+
+def coo_from_dense(dense: np.ndarray, capacity: int | None = None) -> SortedCOO:
+    dense = np.asarray(dense)
+    n_rows, n_cols = dense.shape
+    rows, cols = np.nonzero(dense)
+    keys = (rows * n_cols + cols).astype(np.int32)
+    order = np.argsort(keys, kind="stable")
+    keys, vals = keys[order], dense[rows, cols][order]
+    cap = capacity or len(keys)
+    assert cap >= len(keys)
+    pk = np.full(cap, INVALID_KEY, np.int32)
+    pv = np.zeros(cap, dense.dtype)
+    pk[: len(keys)] = keys
+    pv[: len(keys)] = vals
+    return SortedCOO(
+        keys=jnp.asarray(pk), values=jnp.asarray(pv),
+        count=jnp.asarray(len(keys), jnp.int32), shape=(n_rows, n_cols),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Generators: synthetic stand-ins for the paper's real-world SuiteSparse set.
+# ---------------------------------------------------------------------------
+
+def random_dense_sparse(rng: np.random.Generator, shape, density: float,
+                        dtype=np.float32) -> np.ndarray:
+    """Uniform-random sparsity (paper Fig. 6c right matrices: 1% random)."""
+    mask = rng.random(shape) < density
+    vals = rng.standard_normal(shape).astype(dtype)
+    return np.where(mask, vals, 0).astype(dtype)
+
+
+def banded_sparse(rng: np.random.Generator, shape, bandwidth: int,
+                  dtype=np.float32) -> np.ndarray:
+    """Banded matrix (stencil-like structure; e.g. FEM/FD matrices)."""
+    m, n = shape
+    i = np.arange(m)[:, None]
+    j = np.arange(n)[None, :]
+    mask = np.abs(i - j) <= bandwidth
+    vals = rng.standard_normal(shape).astype(dtype)
+    return np.where(mask, vals, 0).astype(dtype)
+
+
+def powerlaw_sparse(rng: np.random.Generator, shape, density: float,
+                    alpha: float = 1.5, dtype=np.float32) -> np.ndarray:
+    """Power-law row degrees (graph adjacency-like; heavy row imbalance)."""
+    m, n = shape
+    target = int(density * m * n)
+    weights = (np.arange(1, m + 1, dtype=np.float64)) ** (-alpha)
+    weights /= weights.sum()
+    row_nnz = np.minimum(rng.multinomial(target, weights), n)
+    out = np.zeros(shape, dtype)
+    for r in range(m):
+        k = int(row_nnz[r])
+        if k:
+            cols = rng.choice(n, size=k, replace=False)
+            out[r, cols] = rng.standard_normal(k).astype(dtype)
+    return out
+
+
+def block_sparse_mask(rng: np.random.Generator, grid_shape, density: float) -> np.ndarray:
+    """Random block-level mask (for directly generating BCSR streams)."""
+    return rng.random(grid_shape) < density

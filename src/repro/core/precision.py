@@ -1,0 +1,62 @@
+"""Multi-precision policy: the TPU translation of Occamy's FP64..FP8 ladder.
+
+Occamy's SIMD FPUs run FP64/32/16/8 with *widening* sum-dot-product (FP8/16
+inputs accumulating into wider formats). TPU v5e natively runs bf16 x bf16 ->
+f32 and fp8 x fp8 -> f32 on the MXU -- the same widening-accumulate idea. FP64
+has no TPU datapath (recorded in DESIGN.md S7); f32 is the "wide" anchor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+LADDER: Dict[str, jnp.dtype] = {
+    "f32": jnp.float32,          # stands in for the paper's FP64 anchor
+    "bf16": jnp.bfloat16,        # FP16-class
+    "fp8_e4m3": jnp.float8_e4m3fn,   # FP8 (4,3) == paper's FP8alt layout
+    "fp8_e5m2": jnp.float8_e5m2,     # FP8 (5,2) == paper's FP8
+}
+
+# Peak per-chip throughput multipliers vs f32 on the v5e MXU ladder.
+PEAK_MULTIPLIER = {"f32": 1.0, "bf16": 2.0, "fp8_e4m3": 4.0, "fp8_e5m2": 4.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """param/compute/accum dtype triple with widening accumulation."""
+
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    accum_dtype: jnp.dtype = jnp.float32
+
+    def cast_in(self, *xs):
+        out = tuple(x.astype(self.compute_dtype) for x in xs)
+        return out if len(out) > 1 else out[0]
+
+    def dot(self, a: jax.Array, b: jax.Array, **kw) -> jax.Array:
+        """Widening dot: inputs in compute dtype, accumulate in accum dtype."""
+        a, b = self.cast_in(a, b)
+        return jnp.matmul(a, b, preferred_element_type=self.accum_dtype, **kw)
+
+    def einsum(self, expr: str, *xs) -> jax.Array:
+        xs = tuple(x.astype(self.compute_dtype) for x in xs)
+        return jnp.einsum(expr, *xs, preferred_element_type=self.accum_dtype)
+
+
+def policy(name: str = "bf16") -> PrecisionPolicy:
+    """Named policies for the ladder; ``name`` is the compute dtype."""
+    cd = LADDER[name]
+    return PrecisionPolicy(param_dtype=jnp.float32, compute_dtype=cd,
+                           accum_dtype=jnp.float32)
+
+
+def widening_sum_dot(a: jax.Array, b: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    """ExSdotp analogue [Bertaccini, ARITH'22]: fp8/bf16 pairs -> wide sum.
+
+    On TPU this lowers to the MXU's native mixed-precision matmul; here it is
+    the documented primitive the precision benchmarks exercise.
+    """
+    return jnp.sum(a.astype(out_dtype) * b.astype(out_dtype), axis=-1)

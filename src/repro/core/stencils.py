@@ -1,0 +1,101 @@
+"""Stencil specifications and reference application.
+
+The paper's headline stencil is j3d27pt (3-D 27-point Jacobi box, 83% FPU
+util); we carry the full family it benchmarks in Fig. 6a. A stencil is a set
+of (offset, coefficient) taps; applying it at every interior point is a
+gather-FMA chain that Occamy's SUs stream. The reference here uses shifted
+slices (pure JAX); ``repro.kernels.stencil`` is the Pallas streaming version.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilSpec:
+    name: str
+    ndim: int
+    offsets: Tuple[Tuple[int, ...], ...]  # taps, each of length ndim
+    coeffs: Tuple[float, ...]
+
+    @property
+    def points(self) -> int:
+        return len(self.offsets)
+
+    @property
+    def radius(self) -> int:
+        return max(max(abs(o) for o in off) for off in self.offsets)
+
+    def flops_per_point(self) -> int:
+        # one multiply + one add per tap (FMA counts as 2 flops)
+        return 2 * self.points
+
+
+def _star(ndim: int, radius: int = 1) -> Tuple[Tuple[int, ...], ...]:
+    offs = [tuple([0] * ndim)]
+    for d in range(ndim):
+        for r in range(1, radius + 1):
+            for s in (-r, r):
+                o = [0] * ndim
+                o[d] = s
+                offs.append(tuple(o))
+    return tuple(offs)
+
+
+def _box(ndim: int, radius: int = 1) -> Tuple[Tuple[int, ...], ...]:
+    return tuple(itertools.product(range(-radius, radius + 1), repeat=ndim))
+
+
+def _mk(name, ndim, offsets):
+    rng = np.random.default_rng(len(name) * 7 + ndim)  # fixed, reproducible taps
+    coeffs = tuple((rng.random(len(offsets)) * 0.2 + 0.01).tolist())
+    return StencilSpec(name=name, ndim=ndim, offsets=offsets, coeffs=coeffs)
+
+
+STENCILS: Dict[str, StencilSpec] = {
+    "j2d5pt": _mk("j2d5pt", 2, _star(2, 1)),
+    "j2d9pt": _mk("j2d9pt", 2, _box(2, 1)),
+    "j2d9pt-gol": _mk("j2d9pt-gol", 2, _star(2, 2)),  # star radius-2 (9 taps)
+    "j3d7pt": _mk("j3d7pt", 3, _star(3, 1)),
+    "j3d27pt": _mk("j3d27pt", 3, _box(3, 1)),
+}
+
+
+def apply_reference(spec: StencilSpec, grid: jax.Array) -> jax.Array:
+    """Shifted-slice reference: output is the valid interior.
+
+    ``grid`` includes the halo; output shape = grid.shape - 2*radius per dim.
+    """
+    r = spec.radius
+    out_shape = tuple(s - 2 * r for s in grid.shape)
+    acc = jnp.zeros(out_shape, jnp.promote_types(grid.dtype, jnp.float32))
+    for off, c in zip(spec.offsets, spec.coeffs):
+        start = tuple(r + o for o in off)
+        sl = tuple(slice(s, s + n) for s, n in zip(start, out_shape))
+        acc = acc + c * grid[sl].astype(acc.dtype)
+    return acc.astype(grid.dtype)
+
+
+def apply_gather_baseline(spec: StencilSpec, grid: jax.Array) -> jax.Array:
+    """The *no-SU* baseline: explicit index computation + per-tap gather.
+
+    Mirrors the paper's assembly-optimized scalar RISC-V baseline, where every
+    tap costs address arithmetic + a load; used for Fig. 6a's +/- SU contrast.
+    """
+    r = spec.radius
+    out_shape = tuple(s - 2 * r for s in grid.shape)
+    flat = grid.reshape(-1)
+    strides = np.cumprod((1,) + grid.shape[:0:-1])[::-1]  # row-major strides
+    mesh = jnp.meshgrid(*[jnp.arange(r, r + n) for n in out_shape], indexing="ij")
+    base = sum(m * int(s) for m, s in zip(mesh, strides))
+    acc = jnp.zeros(out_shape, jnp.promote_types(grid.dtype, jnp.float32))
+    for off, c in zip(spec.offsets, spec.coeffs):
+        delta = int(sum(o * int(s) for o, s in zip(off, strides)))
+        acc = acc + c * jnp.take(flat, (base + delta).reshape(-1)).reshape(out_shape)
+    return acc.astype(grid.dtype)

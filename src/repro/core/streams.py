@@ -1,0 +1,90 @@
+"""Affine stream descriptors -- the software model of Occamy's SU streams.
+
+An Occamy SU is programmed with up to four (bound, stride) pairs and a base
+pointer; thereafter reads/writes of a register deliver the stream at FPU rate.
+Here a :class:`StreamSpec` captures the same iteration space and compiles to
+either (a) a pure-JAX gather (reference semantics, any backend) or (b) a Pallas
+``BlockSpec`` + ``index_map`` pair, where the Pallas grid pipeline plays the
+role of the SU+DMA double-buffering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """<=4-D affine stream: ``addr(i0..ik) = base + sum_d i_d * stride_d``.
+
+    ``bounds``/``strides`` are in *elements* of the flattened operand, highest
+    dimension first, mirroring the SU register programming model.
+    """
+
+    base: int
+    bounds: Tuple[int, ...]
+    strides: Tuple[int, ...]
+
+    def __post_init__(self):
+        assert 1 <= len(self.bounds) <= 4, "Occamy SUs support <=4-D streams"
+        assert len(self.bounds) == len(self.strides)
+
+    @property
+    def length(self) -> int:
+        return int(np.prod(self.bounds))
+
+    def offsets(self) -> np.ndarray:
+        """Materialized address stream (host-side; for tests/oracles)."""
+        grids = np.meshgrid(*[np.arange(b) for b in self.bounds], indexing="ij")
+        off = np.full(grids[0].shape, self.base, np.int64)
+        for g, s in zip(grids, self.strides):
+            off = off + g * s
+        return off.reshape(-1)
+
+    def read(self, flat: jax.Array) -> jax.Array:
+        """Reference affine-stream read (pure JAX gather)."""
+        return jnp.take(flat.reshape(-1), jnp.asarray(self.offsets()), axis=0)
+
+    @staticmethod
+    def for_tensor(shape: Sequence[int], order: Sequence[int] | None = None) -> "StreamSpec":
+        """Stream that walks ``shape`` in ``order`` (default: row-major)."""
+        shape = tuple(shape)
+        row_major_strides = []
+        acc = 1
+        for s in reversed(shape):
+            row_major_strides.append(acc)
+            acc *= s
+        row_major_strides = list(reversed(row_major_strides))
+        order = tuple(order) if order is not None else tuple(range(len(shape)))
+        return StreamSpec(
+            base=0,
+            bounds=tuple(shape[d] for d in order),
+            strides=tuple(row_major_strides[d] for d in order),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class IndirectStream:
+    """Indexed stream: ``addr(i) = base + idx[i] * stride`` (SU indirection).
+
+    ``idx`` may be int8/16/32 in hardware; here always int32 after widening.
+    """
+
+    indices: jax.Array  # (n,) int32
+    stride: int = 1
+    base: int = 0
+
+    def read(self, flat: jax.Array) -> jax.Array:
+        addr = self.base + self.indices.astype(jnp.int32) * self.stride
+        return jnp.take(flat.reshape(-1), addr, axis=0)
+
+    def write(self, flat: jax.Array, values: jax.Array, accumulate: bool = True) -> jax.Array:
+        addr = self.base + self.indices.astype(jnp.int32) * self.stride
+        flat = flat.reshape(-1)
+        if accumulate:
+            return flat.at[addr].add(values)
+        return flat.at[addr].set(values)

@@ -1,0 +1,124 @@
+"""Streaming-unit (SU) ops: indirection, intersection, union, joint-index write.
+
+These are the paper's contribution (A) as composable JAX primitives. All ops
+are shape-static (fixed capacity + explicit count) so they jit/pjit cleanly;
+padding uses the sentinel ``INVALID_KEY``. The Pallas kernels in
+``repro.kernels`` accelerate the hot paths; these functions are both the
+reference semantics and the general-backend fallback.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import INVALID_KEY
+
+
+class IntersectResult(NamedTuple):
+    keys: jax.Array    # (cap_a,) matched keys, INVALID-padded
+    pos_a: jax.Array   # (cap_a,) positions in a of matches (cap_a past count)
+    pos_b: jax.Array   # (cap_a,) positions in b of matches
+    count: jax.Array   # () int32
+
+
+class UnionResult(NamedTuple):
+    keys: jax.Array    # (cap_a + cap_b,) union keys, INVALID-padded
+    values: jax.Array  # (cap_a + cap_b,) add-combined values
+    count: jax.Array   # () int32
+
+
+def indirect_gather(data: jax.Array, indices: jax.Array) -> jax.Array:
+    """SU indirection: stream ``data[indices[i]]``; indices int8/16/32 widen."""
+    return jnp.take(data, indices.astype(jnp.int32), axis=0)
+
+
+def indirect_scatter_add(out: jax.Array, indices: jax.Array, values: jax.Array) -> jax.Array:
+    """SU indirect write-back with accumulate (sparse result assembly)."""
+    return out.at[indices.astype(jnp.int32)].add(values)
+
+
+def intersect(a_keys: jax.Array, b_keys: jax.Array) -> IntersectResult:
+    """Sorted-stream intersection (the two index-capable SUs cooperating).
+
+    Both inputs are ascending int32, INVALID-padded. Emits matched keys plus
+    the *joint index stream* (positions into both operands) the third SU would
+    write out in hardware.
+    """
+    cap_a = a_keys.shape[0]
+    cap_b = b_keys.shape[0]
+    # For each element of a, binary-search b (the comparator array in O(log)).
+    loc = jnp.searchsorted(b_keys, a_keys)
+    loc_c = jnp.minimum(loc, cap_b - 1).astype(jnp.int32)
+    hit = (b_keys[loc_c] == a_keys) & (a_keys != INVALID_KEY)
+    # Stable-compact the hit positions to the front.
+    tagged = jnp.where(hit, jnp.arange(cap_a, dtype=jnp.int32), INVALID_KEY)
+    pos_a = jnp.sort(tagged)
+    pos_a_c = jnp.minimum(pos_a, cap_a - 1)
+    count = hit.sum().astype(jnp.int32)
+    valid = jnp.arange(cap_a) < count
+    keys = jnp.where(valid, a_keys[pos_a_c], INVALID_KEY).astype(jnp.int32)
+    pos_b = jnp.where(valid, loc_c[pos_a_c], cap_b).astype(jnp.int32)
+    pos_a = jnp.where(valid, pos_a_c, cap_a).astype(jnp.int32)
+    return IntersectResult(keys=keys, pos_a=pos_a, pos_b=pos_b, count=count)
+
+
+def intersect_dot(a_keys, a_vals, b_keys, b_vals) -> jax.Array:
+    """Sparse-sparse dot product: sum of products over the key intersection.
+
+    This is the innermost SpMSpM primitive (Fig. 5 of the paper): the SUs
+    intersect the two index streams and the FPU multiply-accumulates only on
+    matches.
+    """
+    res = intersect(a_keys, b_keys)
+    cap_a = a_keys.shape[0]
+    valid = jnp.arange(cap_a) < res.count
+    av = jnp.where(valid, a_vals[jnp.minimum(res.pos_a, cap_a - 1)], 0)
+    bv = jnp.where(valid, b_vals[jnp.minimum(res.pos_b, b_keys.shape[0] - 1)], 0)
+    return jnp.sum(av * bv)
+
+
+def union_add(a_keys, a_vals, b_keys, b_vals) -> UnionResult:
+    """Sorted-stream union with add-combine (SU merge mode).
+
+    Used for sparse accumulation (SpMSpM row merging) and for sparse gradient
+    all-reduce in ``repro.grad_comp``: combining two workers' top-k gradient
+    streams is exactly this op.
+    """
+    keys = jnp.concatenate([a_keys, b_keys]).astype(jnp.int32)
+    vals = jnp.concatenate([a_vals, b_vals])
+    order = jnp.argsort(keys)
+    keys, vals = keys[order], vals[order]
+    n = keys.shape[0]
+    is_new = jnp.concatenate([jnp.array([True]), keys[1:] != keys[:-1]])
+    is_new = is_new & (keys != INVALID_KEY)
+    slot = jnp.cumsum(is_new) - 1                      # output slot per element
+    slot = jnp.where(keys == INVALID_KEY, n - 1, slot)  # dump padding at the end
+    count = is_new.sum().astype(jnp.int32)
+    out_vals = jnp.zeros(n, vals.dtype).at[slot].add(
+        jnp.where(keys == INVALID_KEY, 0, vals))
+    out_keys = jnp.full(n, INVALID_KEY, jnp.int32).at[slot].set(
+        jnp.where(keys == INVALID_KEY, INVALID_KEY, keys))
+    # Ensure padding slots (>= count) read INVALID even if slot n-1 was touched.
+    idx = jnp.arange(n)
+    out_keys = jnp.where(idx < count, out_keys, INVALID_KEY)
+    out_vals = jnp.where(idx < count, out_vals, 0)
+    return UnionResult(keys=out_keys, values=out_vals, count=count)
+
+
+def topk_sparsify(x: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Flatten ``x`` and keep the k largest-magnitude entries as a sorted
+    (keys, values) stream -- the producer side of sparse gradient exchange."""
+    flat = x.reshape(-1)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    idx = jnp.sort(idx).astype(jnp.int32)
+    return idx, flat[idx]
+
+
+def stream_densify(keys: jax.Array, values: jax.Array, count: jax.Array,
+                   size: int) -> jax.Array:
+    """Scatter a (keys, values, count) stream back to a dense vector."""
+    valid = jnp.arange(keys.shape[0]) < count
+    safe = jnp.where(valid, keys, 0).astype(jnp.int32)
+    return jnp.zeros(size, values.dtype).at[safe].add(jnp.where(valid, values, 0))

@@ -1,0 +1,131 @@
+"""Pallas streaming (flash) attention: the LM-side SU-style kernel.
+
+The same Occamy discipline applied to attention: affine K/V tile streams are
+double-buffered into VMEM by the Pallas pipeline while the MXU runs
+back-to-back (bq x d)(d x bk) products; the online-softmax state (m, l, acc)
+lives in VMEM scratch across the KV grid dimension -- the SPM-resident
+accumulator. Supports GQA (kv-head sharing), causal masking and sliding
+windows (Gemma-3's 5:1 local:global = banded sparsity, same halo discipline
+as the stencil kernels).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_offset_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  acc_ref, *, scale: float, causal: bool, window: int | None,
+                  bq: int, bk: int, n_kv_tiles: int):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qi = pl.program_id(2)
+    # q_offset: absolute position of this shard's first query row (scalar
+    # prefetch) -- lets sequence-sharded callers (shard_map SP) keep exact
+    # causal/window masks.
+    off = q_offset_ref[0]
+    q_pos = off + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # Tile-level skip: entirely-masked KV tiles cost zero FLOPs (the paper's
+    # "only stream useful data" discipline).
+    q_lo, q_hi = off + qi * bq, off + qi * bq + bq - 1
+    k_lo, k_hi = ki * bk, ki * bk + bk - 1
+    live = True
+    if causal:
+        live = live & (k_lo <= q_hi)
+    if window is not None:
+        live = live & (k_hi >= q_lo - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)                # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                             # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                    # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_tiles - 1)
+    def _final():
+        l = l_ref[...]
+        safe = jnp.where(l == 0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    scale: float | None = None, bq: int = 128, bk: int = 128,
+                    q_offset=None, interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D); Hq % Hkv == 0 (GQA).
+
+    ``q_offset``: absolute position of q row 0 (scalar; default 0) for
+    sequence-sharded callers. Returns (B, Hq, Sq, D) in q.dtype.
+    Sq % bq == 0, Skv % bk == 0 (ops.py pads).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0
+    n_kv = Skv // bk
+    if q_offset is None:
+        q_offset = jnp.zeros((1,), jnp.int32)
+    else:
+        q_offset = jnp.asarray(q_offset, jnp.int32).reshape(1)
+    kern = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                             window=window, bq=bq, bk=bk, n_kv_tiles=n_kv)
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, Hq, Sq // bq, n_kv),
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, D),
+                             lambda b, h, qi, ki, off: (b, h, qi, 0)),
+                pl.BlockSpec((1, 1, bk, D),
+                             lambda b, h, qi, ki, off: (b, h // g, ki, 0)),
+                pl.BlockSpec((1, 1, bk, D),
+                             lambda b, h, qi, ki, off: (b, h // g, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, bq, D), lambda b, h, qi, ki, off: (b, h, qi, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
+        interpret=interpret,
+    )(q_offset, q, k, v)

@@ -1,0 +1,84 @@
+"""Public flash-attention API: padding, dtype policy, kernel dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret", "use_kernel"))
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              bq: int = 128, bk: int = 128, interpret: bool = False,
+              use_kernel: bool = True) -> jax.Array:
+    """Streaming attention with GQA + causal/sliding-window masks.
+
+    Pads Sq/Skv up to tile multiples; returns (B, Hq, Sq, D) in q.dtype.
+    ``use_kernel=False`` routes to the jnp reference (used on backends where
+    Pallas is unavailable and for A/B testing).
+    """
+    if not use_kernel:
+        return attention_ref(q, k, v, causal=causal, window=window)
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    bq_eff = min(bq, Sq) if Sq % min(bq, Sq) == 0 else bq
+    bk_eff = min(bk, Skv) if Skv % min(bk, Skv) == 0 else bk
+    qp = (-Sq) % bq_eff
+    kp = (-Skv) % bk_eff
+    qq, kk, vv = q, k, v
+    if qp:
+        qq = jnp.pad(q, ((0, 0), (0, 0), (0, qp), (0, 0)))
+    if kp:
+        kk = jnp.pad(k, ((0, 0), (0, 0), (0, kp), (0, 0)))
+        vv = jnp.pad(v, ((0, 0), (0, 0), (0, kp), (0, 0)))
+    # Padded KV columns must not attend: push them outside the causal horizon
+    # by masking via an additive -inf on padded keys is equivalent to the
+    # causal mask when padding sits at the tail and Sq_pad >= Skv positions;
+    # for the general case we mask padded keys with a window trick: padded
+    # keys have k_pos >= Skv > any real q_pos under causal=True. For
+    # non-causal use, fall back to explicit masking in the reference.
+    if not causal and kp:
+        return attention_ref(q, k, v, causal=causal, window=window)
+    out = _kernel(qq, kk, vv, causal=causal, window=window, bq=bq_eff,
+                  bk=bk_eff, interpret=interpret)
+    return out[:, :, :Sq, :]
+
+
+def decode_attention(q1, k_cache, v_cache, *, kv_len=None, window=None,
+                     interpret: bool = False, use_kernel: bool = False):
+    """One-token decode: q1 (B, Hq, 1, D) against a (B, Hkv, S, D) cache.
+
+    Decode is memory-bound (one Q row streams the whole cache); the jnp path
+    lowers to a clean gather+reduce that XLA fuses, so the kernel is optional.
+    ``kv_len`` masks cache tail beyond the current length.
+    """
+    B, Hq, _, D = q1.shape
+    _, Hkv, S, _ = k_cache.shape
+    g = Hq // Hkv
+    scale = D ** -0.5
+    # repeat-free GQA, narrow-dtype streams, f32 accumulate (ExSdotp pattern)
+    qg = (q1 * scale).astype(k_cache.dtype).reshape(B, Hkv, g, 1, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    pos = jnp.arange(S)[None, None, None, None, :]
+    if kv_len is not None:
+        limit = jnp.asarray(kv_len).reshape(-1, 1, 1, 1, 1)
+        s = jnp.where(pos < limit, s, -1e30)
+        if window is not None:
+            s = jnp.where(pos >= limit - window, s, -1e30)
+    elif window is not None:
+        s = jnp.where(pos >= S - window, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, 1, D).astype(q1.dtype)
+
+
+def flops(B, Hq, Sq, Skv, D, causal=True) -> int:
+    """Attention FLOPs (2 matmuls), halved under causal masking."""
+    f = 4 * B * Hq * Sq * Skv * D
+    return f // 2 if causal else f

@@ -1,0 +1,79 @@
+"""Pallas BCSR x dense SpMM: the SU-indirection kernel (paper Fig. 5 / 6b).
+
+Occamy mechanism: an SU streams the sparse row's column indices; a second SU
+uses them as an *indirect* stream into the dense operand, so the FPU executes
+back-to-back FMAs. TPU translation: the block-column index stream is *scalar
+prefetched* and drives the BlockSpec ``index_map`` of the dense operand -- the
+index stream literally steers the DMA engine one tile ahead of compute
+(``PrefetchScalarGridSpec``), while the MXU consumes (bm x bk) x (bk x bn)
+tiles back-to-back.
+
+Output revisiting: the block stream is sorted by block-row, so for a fixed
+N-tile the output block index is non-decreasing across the inner grid dim;
+Pallas keeps the accumulator tile resident in VMEM until the row changes
+(first-visit zeroing via ``pl.when``), mirroring Occamy's SPM-resident
+accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmm_kernel(brows_ref, bcols_ref, blocks_ref, b_ref, o_ref):
+    i = pl.program_id(1)  # position in the nonzero-block stream (inner dim)
+    row = brows_ref[i]
+    prev = brows_ref[jnp.maximum(i - 1, 0)]
+
+    @pl.when((i == 0) | (row != prev))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = blocks_ref[0]          # (bm, bk)
+    b = b_ref[...]             # (bk, bn)
+    o_ref[...] += jnp.dot(
+        a, b, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def spmm_bcsr(block_rows: jax.Array, block_cols: jax.Array, blocks: jax.Array,
+              dense: jax.Array, *, n_block_rows: int, bn: int = 128,
+              out_dtype=jnp.float32, interpret: bool = False) -> jax.Array:
+    """C = A @ dense where A is streamed as flattened BCSR blocks.
+
+    Args:
+      block_rows / block_cols: (nnzb,) int32, sorted by (row, col); every
+        block-row must appear at least once (ops.py pads empty rows).
+      blocks: (nnzb, bm, bk).
+      dense: (K, N) with K = n_block_cols * bk, N % bn == 0.
+      n_block_rows: number of block rows of A (static).
+    Returns:
+      (n_block_rows * bm, N) in ``out_dtype``.
+    """
+    nnzb, bm, bk = blocks.shape
+    K, N = dense.shape
+    assert N % bn == 0, (N, bn)
+    grid = (N // bn, nnzb)  # j outer, i inner: per-row accumulation contiguity
+
+    return pl.pallas_call(
+        _spmm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # block_rows, block_cols
+            grid=grid,
+            in_specs=[
+                # A-block stream: affine walk of the flattened block array.
+                pl.BlockSpec((1, bm, bk), lambda j, i, rows, cols: (i, 0, 0)),
+                # Dense operand: the *indirect* stream -- block-col index
+                # steers which K-tile the DMA fetches (SU indirection).
+                pl.BlockSpec((bk, bn), lambda j, i, rows, cols: (cols[i], j)),
+            ],
+            out_specs=pl.BlockSpec(
+                (bm, bn), lambda j, i, rows, cols: (rows[i], j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_block_rows * bm, N), out_dtype),
+        interpret=interpret,
+    )(block_rows, block_cols, blocks, dense)

@@ -1,0 +1,69 @@
+"""Public SpMM API: BCSR container in, padded/normalized kernel call out."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import BCSR
+from repro.kernels.spmm.kernel import spmm_bcsr
+
+
+def pad_empty_rows(a: BCSR) -> BCSR:
+    """Ensure every block-row appears in the stream (kernel requirement:
+    unvisited output tiles are undefined). Adds one zero block at col 0 for
+    each empty row; stream stays (row, col)-sorted. Host-side (numpy)."""
+    gm, _ = a.grid_shape
+    rows = np.asarray(a.block_rows)
+    cols = np.asarray(a.block_cols)
+    blocks = np.asarray(a.blocks)
+    present = np.zeros(gm, bool)
+    present[rows] = True
+    missing = np.nonzero(~present)[0].astype(np.int32)
+    if missing.size == 0:
+        return a
+    bm, bk = a.block
+    rows = np.concatenate([rows, missing])
+    cols = np.concatenate([cols, np.zeros_like(missing)])
+    blocks = np.concatenate([blocks, np.zeros((missing.size, bm, bk), blocks.dtype)])
+    order = np.lexsort((cols, rows))
+    indptr = np.zeros(gm + 1, np.int32)
+    np.cumsum(np.bincount(rows, minlength=gm), out=indptr[1:])
+    return BCSR(indptr=jnp.asarray(indptr),
+                block_rows=jnp.asarray(rows[order]),
+                block_cols=jnp.asarray(cols[order]),
+                blocks=jnp.asarray(blocks[order]),
+                shape=a.shape, block=a.block)
+
+
+@functools.partial(jax.jit, static_argnames=("n_block_rows", "bn", "out_dtype", "interpret"))
+def _spmm_jit(block_rows, block_cols, blocks, dense, *, n_block_rows, bn,
+              out_dtype, interpret):
+    return spmm_bcsr(block_rows, block_cols, blocks, dense,
+                     n_block_rows=n_block_rows, bn=bn, out_dtype=out_dtype,
+                     interpret=interpret)
+
+
+def spmm(a: BCSR, dense: jax.Array, *, bn: int = 128, out_dtype=jnp.float32,
+         interpret: bool = False) -> jax.Array:
+    """C = A @ dense. Pads N to a multiple of ``bn`` and strips it after."""
+    a = pad_empty_rows(a)
+    K, N = dense.shape
+    assert K == a.shape[1], (a.shape, dense.shape)
+    bn = min(bn, max(128, N))
+    n_pad = (-N) % bn
+    if n_pad:
+        dense = jnp.pad(dense, ((0, 0), (0, n_pad)))
+    gm, _ = a.grid_shape
+    out = _spmm_jit(a.block_rows, a.block_cols, a.blocks, dense,
+                    n_block_rows=gm, bn=bn, out_dtype=out_dtype,
+                    interpret=interpret)
+    return out[:, :N] if n_pad else out
+
+
+def flops(a: BCSR, n: int) -> int:
+    """Useful FLOPs: 2 * nnz_elements * N (paper counts nonzero FMAs)."""
+    bm, bk = a.block
+    return 2 * int(a.nnzb) * bm * bk * n

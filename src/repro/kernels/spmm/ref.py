@@ -1,0 +1,31 @@
+"""Pure-jnp oracles + no-SU baseline for SpMM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import BCSR
+
+
+def spmm_ref(a: BCSR, dense: jax.Array) -> jax.Array:
+    """Oracle: densify and matmul in f32."""
+    return jnp.matmul(a.todense().astype(jnp.float32),
+                      dense.astype(jnp.float32))
+
+
+def spmm_gather_baseline(a: BCSR, dense: jax.Array) -> jax.Array:
+    """The *no-SU* baseline: explicit gather of dense K-tiles by index, then
+    per-block matmul + segment-sum scatter into rows. Same math, but the
+    gather/scatter traffic goes through generic XLA ops rather than the
+    streaming kernel -- mirrors the paper's scalar-ISA baseline.
+    """
+    nnzb, bm, bk = a.blocks.shape
+    K, N = dense.shape
+    tiles = dense.reshape(K // bk, bk, N)
+    gathered = jnp.take(tiles, a.block_cols, axis=0)          # (nnzb, bk, N)
+    partial = jnp.einsum("zmk,zkn->zmn", a.blocks.astype(jnp.float32),
+                         gathered.astype(jnp.float32))        # (nnzb, bm, N)
+    gm = a.shape[0] // bm
+    out = jnp.zeros((gm, bm, N), jnp.float32)
+    out = out.at[a.block_rows].add(partial)
+    return out.reshape(a.shape[0], N)

@@ -1,0 +1,72 @@
+"""Pallas SpMSpM kernel: tiled index-stream intersection (paper Fig. 6c).
+
+Occamy mechanism: two SUs merge-intersect the sorted index streams of a CSR
+row of A and a CSC column of B; the FPU multiply-accumulates on matches, and
+the paper scores the comparator array by *index comparison rate* (GCOMP/s).
+
+TPU translation: merge loops are serial and hostile to the VPU, so the
+comparator array is re-shaped into what the VPU does natively -- **broadcast
+all-pairs comparison of index tiles**: one (rt x ct x Lb) vector `==` performs
+rt*ct*Lb index comparisons per step. Rows of A (padded-ELL, sorted keys) meet
+columns of B; matches gate a multiply-accumulate into a dense (rt x ct) output
+tile resident in VMEM. GCOMP/s maps to VPU comparison throughput; utilization
+is useful/issued comparisons (reported by ``ops.comparison_stats``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import INVALID_KEY
+
+
+def _spmspm_kernel(ak_ref, av_ref, bk_ref, bv_ref, o_ref, *, rt, ct, la, lb):
+    ak = ak_ref[...]                      # (rt, la) int32 sorted keys
+    av = av_ref[...].astype(jnp.float32)  # (rt, la)
+    bk = bk_ref[...]                      # (ct, lb)
+    bv = bv_ref[...].astype(jnp.float32)  # (ct, lb)
+
+    def body(p, acc):
+        # Comparator array step: keys of A at stream position p vs all of B.
+        a_key = jax.lax.dynamic_slice(ak, (0, p), (rt, 1))      # (rt, 1)
+        a_val = jax.lax.dynamic_slice(av, (0, p), (rt, 1))      # (rt, 1)
+        eq = (a_key[:, None, :] == bk[None, :, :])              # (rt, ct, lb)
+        eq &= a_key[:, None, :] != INVALID_KEY
+        contrib = jnp.where(eq, a_val[:, None, :] * bv[None, :, :], 0.0)
+        return acc + contrib.sum(axis=-1)                       # (rt, ct)
+
+    acc = jax.lax.fori_loop(0, la, body, jnp.zeros((rt, ct), jnp.float32))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def spmspm_ell(a_keys: jax.Array, a_vals: jax.Array,
+               b_keys: jax.Array, b_vals: jax.Array, *,
+               rt: int = 8, ct: int = 8, out_dtype=jnp.float32,
+               interpret: bool = False) -> jax.Array:
+    """C[r, c] = sum over key matches of A-row r and B-col c.
+
+    a_keys/a_vals: (R, La) padded-ELL rows of A (keys ascending, INVALID pad).
+    b_keys/b_vals: (C, Lb) padded-ELL *columns* of B.
+    Returns dense C (R, C); ``ops.py`` compacts to a sparse stream (the third
+    SU's joint-index write-back).
+    """
+    R, la = a_keys.shape
+    C, lb = b_keys.shape
+    assert R % rt == 0 and C % ct == 0, ((R, C), (rt, ct))
+    kern = functools.partial(_spmspm_kernel, rt=rt, ct=ct, la=la, lb=lb)
+    return pl.pallas_call(
+        kern,
+        grid=(R // rt, C // ct),
+        in_specs=[
+            pl.BlockSpec((rt, la), lambda i, j: (i, 0)),
+            pl.BlockSpec((rt, la), lambda i, j: (i, 0)),
+            pl.BlockSpec((ct, lb), lambda i, j: (j, 0)),
+            pl.BlockSpec((ct, lb), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((rt, ct), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), out_dtype),
+        interpret=interpret,
+    )(a_keys, a_vals, b_keys, b_vals)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle + no-SU baseline for SpMSpM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import INVALID_KEY
+
+
+def ell_to_dense(keys: np.ndarray, vals: np.ndarray, width: int) -> np.ndarray:
+    """(R, L) padded-ELL streams -> dense (R, width)."""
+    keys = np.asarray(keys)
+    vals = np.asarray(vals)
+    out = np.zeros((keys.shape[0], width), np.float32)
+    for r in range(keys.shape[0]):
+        m = keys[r] != INVALID_KEY
+        out[r, keys[r][m]] += vals[r][m]
+    return out
+
+
+def spmspm_ref(a_keys, a_vals, b_keys, b_vals, inner: int) -> jax.Array:
+    """Oracle: densify both streams and matmul (A rows x B cols over
+    ``inner``-dim keys)."""
+    da = ell_to_dense(a_keys, a_vals, inner)
+    db = ell_to_dense(b_keys, b_vals, inner)
+    return jnp.asarray(da @ db.T)
+
+
+def spmspm_gather_baseline(a_keys, a_vals, b_keys, b_vals) -> jax.Array:
+    """No-SU baseline: same all-pairs math via XLA ops (no VMEM tiling), i.e.
+    the comparator runs in generic vector code -- the scalar-ISA analogue."""
+    ak = jnp.asarray(a_keys)[:, None, :, None]   # (R, 1, La, 1)
+    bk = jnp.asarray(b_keys)[None, :, None, :]   # (1, C, 1, Lb)
+    av = jnp.asarray(a_vals)[:, None, :, None].astype(jnp.float32)
+    bv = jnp.asarray(b_vals)[None, :, None, :].astype(jnp.float32)
+    eq = (ak == bk) & (ak != INVALID_KEY)
+    return jnp.where(eq, av * bv, 0.0).sum(axis=(2, 3))

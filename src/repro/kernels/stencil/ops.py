@@ -1,0 +1,48 @@
+"""Jitted public API for the Pallas stencil kernels (padding + dispatch)."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stencils import StencilSpec
+from repro.kernels.stencil.kernel import stencil_2d, stencil_3d
+
+_DEFAULT_TILES = {2: (64, 128), 3: (8, 16, 128)}
+
+
+def _padded_tiles(interior: Tuple[int, ...], tile: Tuple[int, ...]):
+    return tuple(-(-n // t) * t for n, t in zip(interior, tile))
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "tile", "interpret"))
+def apply(grid_in: jax.Array, spec: StencilSpec, *, tile: Tuple[int, ...] | None = None,
+          interpret: bool = False) -> jax.Array:
+    """Apply ``spec`` to a halo-carrying grid; handles non-tile-aligned shapes.
+
+    ``grid_in`` has shape interior + 2*radius per dim; returns the interior.
+    """
+    r = spec.radius
+    ndim = spec.ndim
+    assert grid_in.ndim == ndim
+    tile = tile or _DEFAULT_TILES[ndim]
+    # Shrink tiles that exceed the (already halo-less) interior.
+    interior = tuple(s - 2 * r for s in grid_in.shape)
+    tile = tuple(min(t, -(-n // 8) * 8 if i < ndim - 1 else -(-n // 128) * 128)
+                 for i, (t, n) in enumerate(zip(tile, interior)))
+    padded = _padded_tiles(interior, tile)
+    pad = [(0, p - n) for n, p in zip(interior, padded)]
+    x = jnp.pad(grid_in, pad)
+    fn = stencil_2d if ndim == 2 else stencil_3d
+    out = fn(x, spec, tile=tile, interpret=interpret)
+    return out[tuple(slice(0, n) for n in interior)]
+
+
+def flops(spec: StencilSpec, interior: Tuple[int, ...]) -> int:
+    """FLOPs of one application (2 per tap per point, the paper's convention)."""
+    n = 1
+    for s in interior:
+        n *= s
+    return n * spec.flops_per_point()

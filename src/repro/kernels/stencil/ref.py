@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the stencil kernels (shifted-slice formulation)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.stencils import StencilSpec, apply_reference
+
+
+def stencil_ref(grid_in: jax.Array, spec: StencilSpec) -> jax.Array:
+    """Reference: valid-interior stencil application (any ndim)."""
+    return apply_reference(spec, grid_in)

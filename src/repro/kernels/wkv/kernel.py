@@ -1,0 +1,89 @@
+"""Pallas WKV kernel: RWKV-6 recurrence with VMEM-resident state.
+
+The SPerf-B analysis showed the chunked WKV's inter-chunk state
+(B, nh, hd, hd -- 268 MB/device on rwkv6-7b) streaming through HBM once per
+chunk dominates the memory term. This kernel is the Occamy answer: the state
+lives in VMEM *scratch* across the chunk grid dimension (the SPM-resident
+accumulator), so HBM traffic reduces to the r/k/v/w chunk streams + y writes.
+
+Grid: (B, nh, n_chunks) with the chunk dim innermost; scratch S (hd, hd) f32
+persists across chunk steps of one (b, h) pair (same discipline as the flash
+kernel's m/l/acc). Math identical to models.rwkv6.wkv_chunked incl. the
+mid-chunk exponent rescale.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *,
+                chunk: int, hd: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, 0].astype(jnp.float32)          # (Q, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)          # log-decay, <= 0
+    u = u_ref[0].astype(jnp.float32)             # (hd,)
+    S = s_ref[...]                               # (hd, hd) carried state
+
+    cum = jnp.cumsum(w, axis=0)
+    # intra-chunk (mid-rescaled, see models/rwkv6.py)
+    ri = r * jnp.exp(cum - w)
+    mid = cum[chunk // 2][None, :]
+    ri_s = r * jnp.exp(cum - w - mid)
+    kj_s = k * jnp.exp(mid - cum)
+    att = jax.lax.dot_general(ri_s, kj_s, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (Q, Q)
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+            > jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    att = jnp.where(mask, att, 0.0)
+    y = jax.lax.dot(att, v, preferred_element_type=jnp.float32)
+    y += jnp.sum(r * u[None, :] * k, axis=1, keepdims=True) * v  # diag bonus
+    y += jax.lax.dot(ri, S, preferred_element_type=jnp.float32)  # inter-chunk
+
+    # state update: S' = diag(exp(cum_Q)) S + sum_j exp(cum_Q - cum_j) k_j v_j^T
+    decay_out = jnp.exp(cum[-1][None, :] - cum)                  # (Q, hd)
+    s_ref[...] = S * jnp.exp(cum[-1])[:, None] + jax.lax.dot_general(
+        k * decay_out, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+
+def wkv_pallas(r, k, v, w_log, u, *, chunk: int = 128,
+               interpret: bool = False):
+    """r/k/v/w_log: (B, T, nh, hd) with T % chunk == 0 (ops.py pads);
+    u: (nh, hd). Returns y (B, T, nh, hd) f32."""
+    B, T, nh, hd = r.shape
+    assert T % chunk == 0
+    nc = T // chunk
+    # layout: (B, nh, nc*chunk, hd) so chunk blocks are contiguous
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(B, nh, T, hd)
+    rb, kb, vb, wb = map(to_bh, (r, k, v, w_log))
+    kern = functools.partial(_wkv_kernel, chunk=chunk, hd=hd)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nh, T, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rb, kb, vb, wb, u)
+    return out.reshape(B, nh, nc * chunk, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,31 @@
+"""Public WKV-kernel API: padding + dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv.kernel import wkv_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv(r, k, v, w_log, u, *, chunk: int = 128, interpret: bool = False):
+    """Pads T to a chunk multiple and runs the Pallas WKV kernel."""
+    B, T, nh, hd = r.shape
+    chunk = min(chunk, max(8, T))
+    pad = (-T) % chunk
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, zp), jnp.pad(k, zp), jnp.pad(v, zp)
+        w_log = jnp.pad(w_log, zp)
+    y = wkv_pallas(r, k, v, w_log, u, chunk=chunk, interpret=interpret)
+    return y[:, :T]
+
+
+def flops(B, T, nh, hd, chunk=128) -> int:
+    """Dots only: intra-chunk (2 x Q^2 x hd x 2) + inter-chunk (2 x Q x hd^2)
+    + state update (2 x Q x hd^2), per (b, h, c)."""
+    nc = -(-T // chunk)
+    per = 4 * chunk * chunk * hd + 4 * chunk * hd * hd
+    return B * nh * nc * per

@@ -1,0 +1,9 @@
+"""Oracle for the WKV kernel: the sequential recurrence (models.rwkv6)."""
+from __future__ import annotations
+
+from repro.models.rwkv6 import rwkv_scan_ref
+
+
+def wkv_ref(r, k, v, w_log, u):
+    y, _ = rwkv_scan_ref(r, k, v, w_log, u)
+    return y

@@ -1,0 +1,295 @@
+"""Loop-aware HLO accounting for the roofline analysis.
+
+XLA's ``compiled.cost_analysis()`` counts ``while`` bodies ONCE (verified
+empirically), so a scanned N-layer model under-reports FLOPs/bytes by ~N x.
+This module re-derives the three roofline terms from the compiled HLO text:
+
+* computation graph + per-instruction shapes parsed from ``as_text()``;
+* ``while`` trip counts recovered from the loop-condition constants (scans
+  lower to ``i < N`` with a literal N);
+* per-computation multipliers propagated through while/call/fusion edges;
+* dot FLOPs computed exactly (output elements x contracted extent x 2);
+* collective bytes = output bytes of all-gather / all-reduce / reduce-scatter
+  / all-to-all / collective-permute (+ their -start variants);
+* HBM-traffic proxy = output bytes + distinct operand bytes of top-level
+  (post-fusion) instructions.
+
+Shapes in the partitioned module are per-device, so all sums are per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# type group is lazy: stops at the first ` opcode(` token, which skips over
+# tuple types (incl. /*index=N*/ comments) that contain no `word(` pattern
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+"
+    r"([a-zA-Z][\w\-]*)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes appearing in an HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(type_str: str) -> Tuple[int, ...]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return ()
+    dims = m.group(2)
+    return tuple(int(d) for d in dims.split(",")) if dims else ()
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str  # operand list + attrs (raw)
+
+
+def parse_computations(hlo: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if not line.startswith(" ") and ("->" in line) and line.rstrip().endswith("{"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[cur].append(Instr(m.group(1), m.group(2), m.group(3),
+                                    m.group(4)))
+    return comps
+
+
+def _called_comps(instr: Instr) -> List[str]:
+    out = []
+    for key in ("condition=", "body=", "calls=", "to_apply=",
+                "true_computation=", "false_computation=",
+                "branch_computations="):
+        i = instr.rest.find(key)
+        if i < 0:
+            continue
+        seg = instr.rest[i + len(key):]
+        if seg.startswith("{"):
+            seg = seg[1 : seg.index("}")]
+            out.extend(s.strip().lstrip("%") for s in seg.split(","))
+        else:
+            name = re.match(r"%?([\w.\-]+)", seg)
+            if name:
+                out.append(name.group(1))
+    return out
+
+
+def _while_trip(comps, cond_name: str) -> int:
+    """Max integer constant in the loop-condition computation (scan lowers
+    the bound as a literal); defaults to 1 when nothing is found."""
+    best = 1
+    for ins in comps.get(cond_name, []):
+        if ins.op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def computation_multipliers(comps: Dict[str, List[Instr]],
+                            entry: str) -> Dict[str, int]:
+    """Execution-count multiplier per computation (nested loops multiply)."""
+    mult: Dict[str, int] = defaultdict(int)
+
+    def visit(name: str, m: int):
+        if m <= 0 or name not in comps:
+            return
+        mult[name] += m
+        for ins in comps[name]:
+            called = _called_comps(ins)
+            if ins.op == "while":
+                trip = 1
+                body = cond = None
+                for key, val in (("condition=", "cond"), ("body=", "body")):
+                    i = ins.rest.find(key)
+                    if i >= 0:
+                        nm = re.match(r"%?([\w.\-]+)", ins.rest[i + len(key):])
+                        if nm:
+                            if val == "cond":
+                                cond = nm.group(1)
+                            else:
+                                body = nm.group(1)
+                if cond:
+                    trip = _while_trip(comps, cond)
+                if body:
+                    visit(body, m * trip)
+                if cond:
+                    visit(cond, m * (trip + 1))
+            else:
+                for c in called:
+                    visit(c, m)
+
+    visit(entry, 1)
+    return dict(mult)
+
+
+def find_entry(hlo: str) -> str:
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+    return m.group(1) if m else "main"
+
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops whose operands/outputs are real buffer traffic even on TPU (matmul-class
+# reads/writes, data movement, collectives). Pure elementwise/broadcast/
+# convert/compare/select/reduce chains fuse into their consumers on TPU and
+# are excluded; `fusion` output+operands stand in for the whole fused group.
+_RW_OPS = {"dot", "convolution", "custom-call", "fusion", "copy",
+           "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+           "concatenate", "pad", "slice", "sort", "reduce-window",
+           "transpose", "reduce"}
+
+
+def fusion_body_comps(comps: Dict[str, List[Instr]]) -> set:
+    """Computations reachable only as fusion bodies (register-level on TPU)."""
+    bodies = set()
+    for instrs in comps.values():
+        for ins in instrs:
+            if ins.op == "fusion":
+                for c in _called_comps(ins):
+                    bodies.add(c)
+    # nested: computations called from fusion bodies are register-level too
+    grew = True
+    while grew:
+        grew = False
+        for b in list(bodies):
+            for ins in comps.get(b, []):
+                for c in _called_comps(ins):
+                    if c not in bodies:
+                        bodies.add(c)
+                        grew = True
+    return bodies
+
+
+def analyze(hlo: str) -> Dict[str, float]:
+    """Returns loop-aware totals: dot_flops, collective_bytes (by op),
+    traffic_bytes (HBM proxy), plus instruction histograms."""
+    comps = parse_computations(hlo)
+    entry = find_entry(hlo)
+    mult = computation_multipliers(comps, entry)
+    fused = fusion_body_comps(comps)
+
+    dot_flops = 0.0
+    coll_bytes: Dict[str, float] = defaultdict(float)
+    coll_bytes_corr: Dict[str, float] = {}
+    traffic = 0.0
+    op_hist: Dict[str, int] = defaultdict(int)
+
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0)
+        if m == 0:
+            continue
+        shapes = {i.name: i.type_str for i in instrs}
+        in_fusion = cname in fused
+        # Pallas interpret-mode grid loops (multiplier far beyond any model
+        # loop) carry the full operand arrays as loop state; their true HBM
+        # traffic is exactly the block dynamic-slice/-update-slice transfers
+        # (HBM<->VMEM), everything else being VMEM/register-level. Count only
+        # those there; pass-through copies/fusions of the carried arrays are
+        # not memory traffic.
+        kernel_grid = m > 100_000
+        for ins in instrs:
+            op_hist[ins.op] += m
+            out_b = shape_bytes(ins.type_str)
+            if ins.op in ("dot", "convolution"):
+                out_elems = 1
+                for d in shape_dims(ins.type_str):
+                    out_elems *= d
+                # contracted extent from lhs shape + contracting dims
+                ops = re.findall(r"%([\w.\-]+)", ins.rest)
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+                extent = 1
+                if ops and cdims and ops[0] in shapes:
+                    lhs_dims = shape_dims(shapes[ops[0]])
+                    for ci in cdims.group(1).split(","):
+                        if ci != "" and int(ci) < len(lhs_dims):
+                            extent *= lhs_dims[int(ci)]
+                dot_flops += m * 2.0 * out_elems * extent
+            for cop in COLLECTIVES:
+                if ins.op == cop or ins.op == cop + "-start":
+                    coll_bytes[cop] += m * out_b
+                    # TPU-lowering correction (EXPERIMENTS.md SMethod): the
+                    # CPU pipeline (a) upcasts bf16 values to f32 before
+                    # collectives (x2 bytes) and (b) lacks the all-reduce ->
+                    # reduce-scatter reassociation pass (x2 bytes on grad
+                    # reductions). Estimate the TPU bytes for the same
+                    # program: halve f32 collective payloads, halve
+                    # all-reduces.
+                    corr = m * out_b
+                    if "f32[" in ins.type_str:
+                        corr *= 0.5
+                    if cop == "all-reduce":
+                        corr *= 0.5
+                    coll_bytes_corr[cop] = coll_bytes_corr.get(cop, 0.0) + corr
+            # HBM proxy: buffer-level ops outside fusion bodies only
+            if not in_fusion and ins.op in _RW_OPS:
+                if kernel_grid and ins.op not in (
+                        "dynamic-slice", "dynamic-update-slice"):
+                    continue
+                if ins.op in ("dynamic-slice", "slice", "gather"):
+                    # reads only the sliced region, not the whole operand
+                    traffic += m * 2 * out_b
+                    continue
+                if ins.op == "dynamic-update-slice":
+                    ops_names = re.findall(r"%([\w.\-]+)", ins.rest)
+                    upd = (shape_bytes(shapes[ops_names[1]])
+                           if len(ops_names) > 1 and ops_names[1] in shapes
+                           else out_b)
+                    traffic += m * 2 * upd  # read update + write region
+                    continue
+                opnd_b = 0
+                seen = set()
+                for on in re.findall(r"%([\w.\-]+)", ins.rest.split("),")[0]):
+                    if on in shapes and on not in seen:
+                        seen.add(on)
+                        opnd_b += shape_bytes(shapes[on])
+                traffic += m * (out_b + opnd_b)
+
+    return {
+        "dot_flops": dot_flops,
+        "collective_bytes": dict(coll_bytes),
+        "collective_bytes_total": float(sum(coll_bytes.values())),
+        "collective_bytes_tpu_corrected": float(sum(coll_bytes_corr.values())),
+        "traffic_bytes": traffic,
+        "op_hist": {k: v for k, v in sorted(op_hist.items(),
+                                            key=lambda kv: -kv[1])[:24]},
+        "n_computations": len(comps),
+    }

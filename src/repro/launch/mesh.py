@@ -1,0 +1,28 @@
+"""Production mesh construction (single-pod 16x16 and multi-pod 2x16x16).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (device count locks on first backend init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 ("data","model") per pod; 2x16x16 ("pod","data","model") for the
+    dual-pod system (the dual-chiplet analogue -- DESIGN.md S5)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
+    """Small mesh over however many (possibly fake) local devices exist --
+    used by tests and the smoke-scale distributed examples."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

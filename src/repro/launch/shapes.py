@@ -1,0 +1,58 @@
+"""Assigned input-shape grid + abstract input specs for the dry-run.
+
+Four shapes per architecture (the pool's definition):
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> serve prefill
+  decode_32k   seq 32,768  global_batch 128   -> serve_step (1 new token)
+  long_500k    seq 524,288 global_batch 1     -> serve_step; SSM/hybrid/SWA only
+
+``long_500k`` is skipped for pure full-attention archs (unbounded dense KV /
+quadratic prefill) per DESIGN.md S4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    microbatches: int = 1   # gradient-accumulation steps for train
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# archs whose attention is bounded (SWA ring buffers) or stateful (SSM/hybrid)
+LONG_CONTEXT_OK = {"gemma3-12b", "zamba2-1.2b", "rwkv6-7b"}
+
+
+def cell_is_runnable(cfg: ArchConfig, shape: ShapeSpec) -> bool:
+    if shape.name == "long_500k":
+        return cfg.name in LONG_CONTEXT_OK
+    return True
+
+
+def token_inputs(cfg: ArchConfig, shape: ShapeSpec):
+    """Abstract (tokens, embeddings) for train/prefill kinds."""
+    B = shape.global_batch
+    s_front = cfg.frontend_tokens if cfg.frontend != "none" else 0
+    s_text = shape.seq_len - s_front
+    tokens = jax.ShapeDtypeStruct((B, s_text), jnp.int32)
+    emb = None
+    if s_front:
+        emb = jax.ShapeDtypeStruct((B, s_front, cfg.d_model), jnp.bfloat16)
+    return tokens, emb

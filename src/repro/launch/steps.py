@@ -1,0 +1,180 @@
+"""Step factories: train_step / prefill_step / serve_step with shardings.
+
+These are what the dry-run lowers and what train.py/serve.py execute. Each
+factory returns (step_fn, in_specs, out_specs) where the spec trees mirror
+the abstract inputs/outputs (PartitionSpec leaves).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.optim.adamw import AdamW, AdamWState, cosine_schedule, global_norm
+from repro.parallel import context as pctx
+from repro.parallel import sharding as S
+from repro.launch.shapes import ShapeSpec, token_inputs
+
+
+def default_optimizer(total_steps: int = 10000,
+                      master_weights: bool = False) -> AdamW:
+    return AdamW(lr=cosine_schedule(3e-4, 200, total_steps),
+                 master_weights=master_weights)
+
+
+def cast_params_bf16(params_tree):
+    """Model params in bf16 (>=2-D leaves); norms/bias vectors stay f32."""
+    return jax.tree.map(
+        lambda x: (jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+                   if isinstance(x, jax.ShapeDtypeStruct) and x.ndim >= 2
+                   and x.dtype == jnp.float32 else
+                   x.astype(jnp.bfloat16)
+                   if not isinstance(x, jax.ShapeDtypeStruct) and x.ndim >= 2
+                   and x.dtype == jnp.float32 else x),
+        params_tree)
+
+
+def _dp_axis(mesh):
+    return S._filter(P(S.FSDP), mesh)[0]
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: M.init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(cfg: ArchConfig, optimizer: AdamW):
+    params = abstract_params(cfg)
+    return jax.eval_shape(optimizer.init, params)
+
+
+# ------------------------------------------------------------------ train ---
+
+def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
+                    optimizer: Optional[AdamW] = None, *,
+                    seq_chunk: int = 512, impl: str = "chunked",
+                    seq_parallel: bool = True, moe_impl: str = "pjit",
+                    microbatches: Optional[int] = None,
+                    attn_impl: Optional[str] = None):
+    """Returns (train_step, (in_shardings...), (out_shardings...)).
+
+    ``seq_parallel``: shard the residual stream's sequence dim over "model"
+    (Megatron-SP). The remat-saved per-layer carries shrink by the TP width,
+    which is what keeps the 4k x 256 train cells inside HBM; GSPMD inserts
+    the all-gathers around attention/MLP that TP needs anyway.
+    """
+    optimizer = optimizer or default_optimizer()
+    dp = _dp_axis(mesh)
+    k = microbatches or shape.microbatches
+    act_spec = P(dp, "model", None) if seq_parallel else P(dp, None, None)
+    moe_spec = P("model", dp, None, None) if cfg.n_experts else None
+    moe_combine = P(dp, None, None) if cfg.n_experts else None
+    moe_groups = S.data_axis_size(mesh) if cfg.n_experts else None
+    logit_spec = P(dp, None, "model")
+
+    def train_step(params, opt_state, tokens, embeddings=None):
+        def loss_of(p, tok, emb):
+            with pctx.activation_specs(act=act_spec, moe=moe_spec,
+                                       logit=logit_spec, moe_groups=moe_groups,
+                                       moe_combine=moe_combine,
+                                       moe_impl=moe_impl, mesh=mesh):
+                return M.loss_fn(p, tok, cfg, embeddings=emb,
+                                 impl=attn_impl or impl, seq_chunk=seq_chunk)
+
+        if k == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, tokens, embeddings)
+        else:
+            B = tokens.shape[0]
+            tok_mb = tokens.reshape(k, B // k, tokens.shape[1])
+            emb_mb = (embeddings.reshape(k, B // k, *embeddings.shape[1:])
+                      if embeddings is not None else None)
+
+            def mb_body(carry, inp):
+                loss_acc, grad_acc = carry
+                tok = inp[0]
+                emb = inp[1] if emb_mb is not None else None
+                l, g = jax.value_and_grad(loss_of)(params, tok, emb)
+                grad_acc = jax.tree.map(jnp.add, grad_acc, g)
+                return (loss_acc + l, grad_acc), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            xs = (tok_mb,) if emb_mb is None else (tok_mb, emb_mb)
+            (loss, grads), _ = jax.lax.scan(
+                mb_body, (jnp.zeros(()), zeros), xs)
+            loss = loss / k
+            grads = jax.tree.map(lambda g: g / k, grads)
+
+        gn = global_norm(grads)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss, "grad_norm": gn}
+
+    p_specs = S.param_specs(abstract_params(cfg), mesh)
+    o_specs = AdamWState(m=p_specs, v=p_specs, count=P(),
+                         master=(p_specs if optimizer.master_weights else None))
+    tok_spec = P(dp, None)
+    emb_spec = P(dp, None, None)
+    return train_step, (p_specs, o_specs, tok_spec, emb_spec), \
+        (p_specs, o_specs, {"loss": P(), "grad_norm": P()})
+
+
+# ---------------------------------------------------------------- serving ---
+
+def make_prefill_step(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
+                      impl: str = "chunked", seq_parallel: bool = True,
+                      moe_impl: str = "pjit"):
+    dp = _dp_axis(mesh)
+    act_spec = P(dp, "model", None) if seq_parallel else P(dp, None, None)
+    moe_spec = P("model", dp, None, None) if cfg.n_experts else None
+    moe_combine = P(dp, None, None) if cfg.n_experts else None
+    moe_groups = S.data_axis_size(mesh) if cfg.n_experts else None
+
+    def prefill_step(params, tokens, embeddings=None):
+        with pctx.activation_specs(act=act_spec, moe=moe_spec,
+                                   moe_groups=moe_groups,
+                                   moe_combine=moe_combine,
+                                   moe_impl=moe_impl, mesh=mesh):
+            return M.prefill(params, tokens, cfg, max_seq=shape.seq_len,
+                             embeddings=embeddings, impl=impl)
+
+    p_specs = S.param_specs(abstract_params(cfg), mesh)
+    cache = abstract_cache(cfg, shape)
+    c_specs = S.cache_specs(cache, cfg, mesh, batch=shape.global_batch)
+    out_specs = (P(dp, None, "model"), c_specs, P())
+    return prefill_step, (p_specs, P(dp, None), P(dp, None, None)), out_specs
+
+
+def make_serve_step(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
+                    greedy: bool = True):
+    """One-token decode + greedy sampling."""
+    dp = _dp_axis(mesh)
+    moe_spec = P("model", dp, None, None) if cfg.n_experts else None
+    moe_combine = P(dp, None, None) if cfg.n_experts else None
+    moe_groups = S.data_axis_size(mesh) if cfg.n_experts else None
+
+    def serve_step(params, cache, pos, tokens_1):
+        with pctx.activation_specs(moe=moe_spec, moe_groups=moe_groups,
+                                   moe_combine=moe_combine):
+            logits, new_cache = M.decode_step(params, cfg, cache, pos, tokens_1)
+        nxt = jnp.argmax(logits[:, -1, : cfg.vocab_size],
+                         axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, new_cache
+
+    p_specs = S.param_specs(abstract_params(cfg), mesh)
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+    c_specs = S.cache_specs(cache, cfg, mesh, batch=shape.global_batch)
+    batch_ok = shape.global_batch % S.data_axis_size(mesh) == 0 and \
+        shape.global_batch >= S.data_axis_size(mesh)
+    tok_spec = P(dp, None) if batch_ok else P(None, None)
+    return serve_step, (p_specs, c_specs, P(), tok_spec), \
+        (tok_spec, None, c_specs)
+
+
+def abstract_cache(cfg: ArchConfig, shape: ShapeSpec):
+    return jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))

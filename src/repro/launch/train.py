@@ -1,0 +1,81 @@
+"""Training launcher: end-to-end driver over the fault-tolerant runtime.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+      --steps 50 --batch 8 --seq 128
+  PYTHONPATH=src python -m repro.launch.train --arch llama4-scout-17b-a16e \
+      --smoke --steps 20 --grad-compress-k 4096
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke
+from repro.data.pipeline import SyntheticLM
+from repro.grad_comp.sparse_allreduce import compress, union_reduce
+from repro.core.su import stream_densify
+from repro.models import model as M
+from repro.optim.adamw import AdamW, cosine_schedule, global_norm
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def make_step(cfg, opt, grad_compress_k: int = 0):
+    @jax.jit
+    def step(params, opt_state, tokens, embeddings=None):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(p, tokens, cfg, embeddings=embeddings))(params)
+        if grad_compress_k:
+            # top-k sparse gradient exchange (SU union) on every large leaf;
+            # single-host sim: compress+densify (lossy path exercised e2e)
+            def comp(g):
+                if g.size <= grad_compress_k:
+                    return g
+                keys, vals, _ = compress(g.reshape(-1), grad_compress_k)
+                return stream_densify(keys, vals,
+                                      jnp.asarray(grad_compress_k),
+                                      g.size).reshape(g.shape)
+            grads = jax.tree.map(comp, grads)
+        new_p, new_o = opt.update(grads, opt_state, params)
+        return new_p, new_o, {"loss": loss, "grad_norm": global_norm(grads)}
+    return step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="checkpoints/train")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--grad-compress-k", type=int, default=0)
+    ap.add_argument("--policy", default=None, help="f32|bf16|fp8_e4m3")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    if args.policy:
+        cfg = dataclasses.replace(cfg, policy=args.policy)
+    opt = AdamW(lr=cosine_schedule(args.lr, warmup=min(20, args.steps // 5),
+                                   total=args.steps))
+    data = SyntheticLM(cfg, batch=args.batch, seq_len=args.seq, seed=0)
+    trainer = Trainer(
+        TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir, log_every=5),
+        cfg, make_step(cfg, opt, args.grad_compress_k), opt, data,
+        init_state=lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    out = trainer.run()
+    first = out["history"][0][1]
+    last = out["history"][-1][1]
+    print(f"done: loss {first:.4f} -> {last:.4f} over {args.steps} steps; "
+          f"stragglers={len(out['stragglers'])}")
+
+
+if __name__ == "__main__":
+    main()

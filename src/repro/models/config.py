@@ -1,0 +1,123 @@
+"""Architecture configuration: one frozen dataclass drives the whole stack.
+
+A model is a scanned stack of *superblocks* (the repeating unit). Each
+superblock is a tuple of sub-layer kinds, so heterogeneous-but-periodic
+stacks (Gemma-3's 5 local : 1 global, Llama-4's dense/MoE alternation,
+Zamba-2's shared-attention insertions) scan homogeneously: params are stacked
+along the repeat axis and `lax.scan` keeps the HLO one-superblock small.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+LayerKind = str  # attn | attn_local | attn_global | mamba | rwkv | <x>+moe ...
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | audio | vlm
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    # stack structure
+    block_unit: Tuple[LayerKind, ...]  # the repeating superblock
+    n_repeats: int                     # stack = block_unit * n_repeats
+    head_dim: Optional[int] = None     # default d_model // n_heads
+    # attention options
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    local_window: Optional[int] = None   # for attn_local layers
+    rope_theta: float = 1e6
+    # mlp
+    mlp_type: str = "swiglu"             # swiglu | squared_relu
+    # moe
+    n_experts: int = 0
+    top_k: int = 1
+    capacity_factor: float = 1.25
+    moe_shared_expert: bool = False      # Llama-4 style always-on shared expert
+    # ssm (mamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    # zamba-style shared block: apply a single shared attention block after
+    # every `shared_attn_every` scanned steps (0 = never)
+    shared_attn_every: int = 0
+    # extra leading layers of kind block_unit[0] outside the main scan (used
+    # to hit exact layer counts, e.g. zamba2's 38 = 2 + 6*6)
+    n_prologue: int = 0
+    # frontend stubs: 'none' | 'vision' | 'audio' -- input_specs() then expects
+    # precomputed patch/frame embeddings alongside (or instead of) tokens
+    frontend: str = "none"
+    frontend_tokens: int = 0             # prepended embedding positions
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # dtype policy name from repro.core.precision
+    policy: str = "bf16"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding-table rows padded to a TP/FSDP-shardable multiple (256
+        divides every production mesh axis product used here). Logits over
+        padded ids are masked in the loss and sliced off in serving."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.block_unit) * self.n_repeats + self.n_prologue
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + stacked blocks)."""
+        d, ff, V = self.d_model, self.d_ff, self.vocab_size
+        hd, Hq, Hkv = self.hd, self.n_heads, self.n_kv_heads
+        n = V * d                      # embedding
+        if not self.tie_embeddings:
+            n += V * d                 # unembedding
+        per_kind = {}
+        attn = d * (Hq * hd) + 2 * d * (Hkv * hd) + (Hq * hd) * d
+        if self.qkv_bias:
+            attn += (Hq + 2 * Hkv) * hd
+        mlp = (3 if self.mlp_type == "swiglu" else 2) * d * ff
+        per_kind["attn"] = attn + mlp + 2 * d
+        per_kind["attn_local"] = per_kind["attn_global"] = per_kind["attn"]
+        moe_ffn = self.n_experts * (3 if self.mlp_type == "swiglu" else 2) * d * ff \
+            + d * self.n_experts
+        if self.moe_shared_expert:
+            moe_ffn += (3 if self.mlp_type == "swiglu" else 2) * d * ff
+        per_kind["attn+moe"] = attn + moe_ffn + 2 * d
+        d_in = self.ssm_expand * d
+        nh = d_in // self.ssm_head_dim
+        mamba = d * (2 * d_in + 2 * self.ssm_state + nh) \
+            + self.ssm_conv * (d_in + 2 * self.ssm_state) \
+            + d_in * d + 2 * nh + d_in
+        per_kind["mamba"] = mamba + d
+        per_kind["rwkv"] = int(d * ff * 2 + d * d * 5 + 2 * d)  # see rwkv6.py
+        for kind in self.block_unit:
+            n += per_kind[kind] * self.n_repeats
+        if self.n_prologue:
+            n += per_kind[self.block_unit[0]] * self.n_prologue
+        if self.shared_attn_every:
+            n += per_kind["attn"]      # one shared block, reused
+        return int(n)
+
+    def active_param_count(self) -> int:
+        """Active params per token (= total for dense; routed subset for MoE)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        w = (3 if self.mlp_type == "swiglu" else 2) * d * ff
+        inactive = (self.n_experts - self.top_k) * w
+        n_moe_layers = sum(k == "attn+moe" for k in self.block_unit) * self.n_repeats
+        return int(self.param_count() - inactive * n_moe_layers)

@@ -1,0 +1,298 @@
+"""Neural-net layer primitives: norms, RoPE, GQA attention, MLPs.
+
+Pure-function style: ``init_*`` builds a param dict, ``apply_*`` consumes it.
+Attention has three interchangeable implementations with one contract:
+
+* ``kernel``  -- the Pallas flash kernel (TPU target; interpret-tested on CPU)
+* ``chunked`` -- pure-jnp online-softmax over KV chunks: identical memory
+                 profile to the kernel (no (S,S) materialization), lowerable on
+                 any backend -- this is what the multi-pod dry-run rooflines.
+* ``ref``     -- materialized softmax oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+
+# ----------------------------------------------------------------- norms ----
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * p["scale"]).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope ----
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, hd); positions: (S,) or broadcastable."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention ----
+
+_FLASH_CVJP_CACHE = {}
+
+
+def flash_fwd_chunked_bwd(causal: bool, window):
+    """Differentiable kernelized attention: the Pallas flash kernel on the
+    forward (streaming memory profile), the chunked-jnp VJP on the backward
+    (per-chunk remat; the flash backward kernel is future work). This is what
+    lets *train* steps run the kernel forward (SPerf-E)."""
+    key = (causal, window)
+    if key in _FLASH_CVJP_CACHE:
+        return _FLASH_CVJP_CACHE[key]
+
+    @jax.custom_vjp
+    def f(q, k, v):
+        return sharded_flash_attention(q, k, v, causal=causal, window=window)
+
+    def fwd(q, k, v):
+        return f(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_: chunked_attention(q_, k_, v_, causal=causal,
+                                                 window=window), q, k, v)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    _FLASH_CVJP_CACHE[key] = f
+    return f
+
+
+def sharded_flash_attention(q, k, v, *, causal=True, window=None):
+    """Pallas flash kernel under shard_map: q sequence-sharded over "model",
+    batch over the FSDP axes; K/V gathered per shard (the gather SP performs
+    anyway). Scores never leave VMEM -- the SPerf-D lever for prefill.
+
+    Inference-only (the kernel has no custom VJP); the train path keeps the
+    differentiable chunked formulation.
+    """
+    from repro.parallel import context as pctx
+    from repro.parallel.sharding import FSDP
+    from repro.kernels.flash_attention.kernel import flash_attention as _fk
+    mesh = pctx.MESH
+    if mesh is None:
+        from repro.kernels.flash_attention.ops import attention as flash
+        return flash(q, k, v, causal=causal, window=window)
+    from jax.sharding import PartitionSpec as P
+    dp = tuple(a for a in FSDP if a in mesh.axis_names)
+    dp = dp if len(dp) > 1 else dp[0]
+    tp = "model"
+    S = q.shape[2]
+    S_loc = S // mesh.shape[tp]
+    interpret = jax.devices()[0].platform != "tpu"
+
+    def body(qb, kb, vb):
+        off = jax.lax.axis_index(tp) * S_loc
+        return _fk(qb, kb, vb, causal=causal, window=window, q_offset=off,
+                   bq=min(128, S_loc), bk=128, interpret=interpret)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp, None, tp, None), P(dp, None, None, None),
+                  P(dp, None, None, None)),
+        out_specs=P(dp, None, tp, None),
+        check_vma=False)  # pallas_call outputs carry no vma metadata
+    return fn(q, k, v)
+
+
+def init_attention(key, cfg: ArchConfig):
+    d, hd, Hq, Hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, Hq * hd), jnp.float32) * s,
+        "wk": jax.random.normal(k2, (d, Hkv * hd), jnp.float32) * s,
+        "wv": jax.random.normal(k3, (d, Hkv * hd), jnp.float32) * s,
+        "wo": jax.random.normal(k4, (Hq * hd, d), jnp.float32) * s,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((Hkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((Hkv * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd)
+        p["k_norm"] = init_rmsnorm(hd)
+    return p
+
+
+def _qkv(p, x, cfg: ArchConfig, positions):
+    B, S, d = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    cd = x.dtype
+    q = x @ p["wq"].astype(cd)
+    k = x @ p["wk"].astype(cd)
+    v = x @ p["wv"].astype(cd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = q.reshape(B, S, Hq, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, chunk=1024):
+    """Online-softmax over KV chunks in pure jnp (flash semantics, XLA-fused).
+
+    q: (B, Hq, Sq, hd); k/v: (B, Hkv, Skv, hd).
+
+    Occamy-style multi-precision discipline: operands stream in their narrow
+    dtype (bf16) and only the MXU accumulators widen to f32 (the ExSdotp
+    pattern) -- no f32 K/V buffers, no materialized GQA head repeat. This
+    halves HBM and collective traffic vs. the naive formulation (measured in
+    EXPERIMENTS.md SPerf).
+    """
+    B, Hq, Sq, hd = q.shape
+    _, Hkv, Skv, _ = k.shape
+    g = Hq // Hkv
+    scale = hd ** -0.5
+    chunk = min(chunk, Skv)
+    pad = (-Skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_chunks = (Skv + pad) // chunk
+    kc = k.reshape(B, Hkv, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, Hkv, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+    # GQA without repeat: group dim g rides along the head dim of q only
+    qg = (q * scale).astype(k.dtype).reshape(B, Hkv, g, Sq, hd)
+    q_pos = jnp.arange(Sq)[:, None]
+
+    def body(carry, inp):
+        m, l, acc, ci = carry
+        kb, vb = inp                                      # (B, Hkv, chunk, hd)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb,
+                       preferred_element_type=jnp.float32)
+        k_pos = ci * chunk + jnp.arange(chunk)[None, :]
+        mask = k_pos < Skv
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc, ci + 1), None
+
+    init = (jnp.full((B, Hkv, g, Sq, 1), -1e30, jnp.float32),
+            jnp.zeros((B, Hkv, g, Sq, 1), jnp.float32),
+            jnp.zeros((B, Hkv, g, Sq, hd), jnp.float32),
+            jnp.asarray(0, jnp.int32))
+    # flash backward = recompute: without this, AD stacks per-chunk scores/
+    # probs across ALL chunks (n_chunks x (B,H,Sq,chunk) f32 residuals)
+    body = jax.checkpoint(body)
+    (m, l, acc, _), _ = jax.lax.scan(body, init, (kc, vc))
+    out = acc / jnp.where(l == 0, 1.0, l)
+    return out.reshape(B, Hq, Sq, hd).astype(q.dtype)
+
+
+def apply_attention(p, x, cfg: ArchConfig, *, window=None, positions=None,
+                    impl: str = "chunked", cache=None, cache_len=None,
+                    collect_kv: int = 0):
+    """Self-attention (train/prefill) or one-step decode when ``cache`` given.
+
+    cache: dict(k=(B,Hkv,S,hd), v=...) -- updated functionally; ``cache_len``
+    is the current fill (int32 scalar or (B,)).
+    ``collect_kv``: when > 0 (prefill), also return a fresh KV cache of that
+    capacity filled with this call's keys/values (window-truncated for local
+    layers).
+    Returns (out, new_cache).
+    """
+    B, S, d = x.shape
+    if cache is None:
+        positions = positions if positions is not None else jnp.arange(S)
+        q, k, v = _qkv(p, x, cfg, positions)
+        if impl == "kernel":
+            from repro.kernels.flash_attention.ops import attention as flash
+            out = flash(q, k, v, causal=True, window=window)
+        elif impl == "kernel_sharded":
+            out = flash_fwd_chunked_bwd(True, window)(q, k, v)
+        elif impl == "chunked":
+            out = chunked_attention(q, k, v, causal=True, window=window)
+        else:
+            from repro.kernels.flash_attention.ref import attention_ref
+            out = attention_ref(q, k, v, causal=True, window=window)
+        new_cache = None
+        if collect_kv:
+            cap = min(collect_kv, window) if window else collect_kv
+            if window and S >= window:
+                # local-layer ring buffer: keep the last `window` positions,
+                # placed at their ring slots (pos % window)
+                order = jnp.argsort(positions[-window:] % window)
+                kc = jnp.take(k[:, :, -window:], order, axis=2)
+                vc = jnp.take(v[:, :, -window:], order, axis=2)
+            else:
+                pad = cap - S
+                kc = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                vc = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            new_cache = {"k": kc, "v": vc}
+    else:
+        assert S == 1
+        pos = jnp.asarray(cache_len).reshape(())  # scalar fill pointer
+        q, k1, v1 = _qkv(p, x, cfg, jnp.full((1,), pos))
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype), pos, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype), pos, axis=2)
+        from repro.kernels.flash_attention.ops import decode_attention
+        out = decode_attention(q, kc, vc, kv_len=pos + 1, window=window)
+        new_cache = {"k": kc, "v": vc}
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.hd)
+    return out @ p["wo"].astype(out.dtype), new_cache
+
+
+# ------------------------------------------------------------------- mlp ----
+
+def init_mlp(key, cfg: ArchConfig, d_ff: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    s = d ** -0.5
+    if cfg.mlp_type == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"w_gate": jax.random.normal(k1, (d, ff), jnp.float32) * s,
+                "w_up": jax.random.normal(k2, (d, ff), jnp.float32) * s,
+                "w_down": jax.random.normal(k3, (ff, d), jnp.float32) * (ff ** -0.5)}
+    k1, k2 = jax.random.split(key)
+    return {"w_up": jax.random.normal(k1, (d, ff), jnp.float32) * s,
+            "w_down": jax.random.normal(k2, (ff, d), jnp.float32) * (ff ** -0.5)}
+
+
+def apply_mlp(p, x, cfg: ArchConfig):
+    cd = x.dtype
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(cd)) * (x @ p["w_up"].astype(cd))
+    else:  # squared_relu (Nemotron-4)
+        h = jnp.square(jax.nn.relu(x @ p["w_up"].astype(cd)))
+    return h @ p["w_down"].astype(cd)

@@ -1,0 +1,171 @@
+"""Mamba-2 mixer (SSD, chunked) -- Zamba-2's backbone layer.
+
+Streaming view (the Occamy lens): the SSD recurrence
+``h_t = a_t * h_{t-1} + dt_t * x_t B_t^T`` is an affine stream over time with
+a data-dependent decay; the chunked algorithm below turns it into dense tile
+work (intra-chunk quadratic + inter-chunk scan), which is exactly the
+re-blocking-for-the-MXU discipline used everywhere in this repo.
+
+Shapes: x (B, T, d); d_in = expand*d; nh = d_in/ssm_head_dim heads; state ns.
+``mamba_scan_ref`` is the naive sequential oracle used by the tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import init_rmsnorm, rmsnorm
+
+
+def init_mamba(key, cfg: ArchConfig):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    ns, hd = cfg.ssm_state, cfg.ssm_head_dim
+    nh = d_in // hd
+    conv_ch = d_in + 2 * ns
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        # fused input projection: [x(d_in), B(ns), C(ns), z(d_in), dt(nh)]
+        "w_in": jax.random.normal(ks[0], (d, 2 * d_in + 2 * ns + nh), jnp.float32) * s,
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": init_rmsnorm(d_in),
+        "w_out": jax.random.normal(ks[2], (d_in, d), jnp.float32) * (d_in ** -0.5),
+    }
+
+
+def _split_proj(p, x, cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    ns = cfg.ssm_state
+    nh = d_in // cfg.ssm_head_dim
+    proj = x @ p["w_in"].astype(x.dtype)
+    xs, Bv, Cv, z, dt = jnp.split(
+        proj, [d_in, d_in + ns, d_in + 2 * ns, 2 * d_in + 2 * ns], axis=-1)
+    return xs, Bv, Cv, z, dt, d_in, ns, nh
+
+
+def _causal_conv(xBC, w, b, prev=None):
+    """Depthwise causal conv over time. xBC: (B, T, C); w: (K, C).
+
+    ``prev``: (B, K-1, C) carry-in for decode; returns (out, new_prev)."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    full = jnp.concatenate([prev, xBC], axis=1)
+    out = sum(full[:, i : i + xBC.shape[1]] * w[i] for i in range(K)) + b
+    return jax.nn.silu(out), full[:, -(K - 1):]
+
+
+def ssd_chunked(xh, a_log, Bv, Cv, *, chunk: int = 64, h0=None):
+    """Chunked SSD. xh: (B,T,nh,hd) (already dt-scaled); a_log: (B,T,nh) (<=0);
+    Bv/Cv: (B,T,ns). Returns (y (B,T,nh,hd), h_final (B,nh,hd,ns))."""
+    B, T, nh, hd = xh.shape
+    ns = Bv.shape[-1]
+    pad = (-T) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        Bv = jnp.pad(Bv, ((0, 0), (0, pad), (0, 0)))
+        Cv = jnp.pad(Cv, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // chunk
+    xc = xh.reshape(B, nc, chunk, nh, hd)
+    ac = a_log.reshape(B, nc, chunk, nh)
+    Bc = Bv.reshape(B, nc, chunk, ns)
+    Cc = Cv.reshape(B, nc, chunk, ns)
+
+    cum = jnp.cumsum(ac, axis=2)                         # inclusive within chunk
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i>=j (j contributes at i>=j)
+    # NB: mask BEFORE exp -- the i<j region has positive exponents that
+    # overflow, and where-after-exp poisons gradients with NaNs.
+    li = cum[:, :, :, None, :]                           # (B,nc,Q,1,nh)
+    lj = cum[:, :, None, :, :]                           # (B,nc,1,Q,nh)
+    mask = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+    L = jnp.exp(jnp.where(mask[None, None, :, :, None], li - lj, -jnp.inf))
+    scores = jnp.einsum("bcis,bcjs->bcij", Cc, Bc)       # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhd->bcihd",
+                         scores, L, xc)                  # h=nh, d=hd
+
+    # chunk-final states: S_c = sum_j exp(cum_Q - cum_j) * B_j (x) xh_j
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)         # (B,nc,Q,nh)
+    S = jnp.einsum("bcjh,bcjs,bcjhd->bchds", decay_out, Bc, xc)  # (B,nc,nh,hd,ns)
+
+    # inter-chunk recurrence over c
+    a_tot = jnp.exp(cum[:, :, -1, :])                    # (B,nc,nh)
+    if h0 is None:
+        h0 = jnp.zeros((B, nh, hd, ns), jnp.float32)
+
+    def step(h, inp):
+        at, Sc = inp                                     # (B,nh), (B,nh,hd,ns)
+        h = h * at[:, :, None, None] + Sc
+        return h, h
+
+    hs_in = (a_tot.transpose(1, 0, 2), S.transpose(1, 0, 2, 3, 4))
+    h_last, h_all = jax.lax.scan(step, h0, hs_in)        # h_all: (nc,B,nh,hd,ns)
+    h_prev = jnp.concatenate([h0[None], h_all[:-1]], axis=0)  # state entering c
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)             # (B,nc,nh,hd,ns)
+
+    # y_inter_i = exp(cum_i) * C_i . h_prev
+    y_inter = jnp.einsum("bcih,bcis,bchds->bcihd",
+                         jnp.exp(cum), Cc, h_prev)
+    y = (y_intra + y_inter).reshape(B, Tp, nh, hd)
+    return y[:, :T], h_last
+
+
+def apply_mamba(p, x, cfg: ArchConfig, *, cache=None, chunk: int = 256,
+                collect: bool = False):
+    """Mamba-2 block. cache = dict(conv=(B,K-1,C), ssm=(B,nh,hd,ns)) for
+    decode (T==1); ``collect`` returns the prefill-final cache.
+    Returns (out, new_cache)."""
+    B, T, d = x.shape
+    xs, Bv, Cv, z, dt, d_in, ns, nh = _split_proj(p, x, cfg)
+    hd = cfg.ssm_head_dim
+    xBC = jnp.concatenate([xs, Bv, Cv], axis=-1)
+    conv_prev = cache["conv"] if cache is not None else None
+    xBC, conv_new = _causal_conv(xBC, p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype), conv_prev)
+    xs, Bv, Cv = jnp.split(xBC, [d_in, d_in + ns], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,T,nh)
+    a = -jnp.exp(p["a_log"])[None, None]                          # (B,T,nh) <0
+    a_log = a * dt
+    xh = xs.astype(jnp.float32).reshape(B, T, nh, hd) * dt[..., None]
+
+    if cache is None:
+        y, h_last = ssd_chunked(xh, a_log, Bv.astype(jnp.float32),
+                                Cv.astype(jnp.float32), chunk=chunk)
+        new_cache = {"conv": conv_new, "ssm": h_last} if collect else None
+    else:
+        h0 = cache["ssm"]
+        hb = jnp.einsum("bthd,bts->bhds", xh, Bv.astype(jnp.float32))
+        h_last = h0 * jnp.exp(a_log)[:, 0, :, None, None] + hb
+        y = jnp.einsum("bts,bhds->bthd", Cv.astype(jnp.float32), h_last)
+        new_cache = {"conv": conv_new, "ssm": h_last}
+
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32).reshape(B, T, nh, hd)
+    y = y.reshape(B, T, d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["w_out"].astype(x.dtype), new_cache
+
+
+def mamba_scan_ref(xh, a_log, Bv, Cv, h0=None):
+    """Naive sequential oracle for ssd_chunked (tests only)."""
+    B, T, nh, hd = xh.shape
+    ns = Bv.shape[-1]
+    h = h0 if h0 is not None else jnp.zeros((B, nh, hd, ns), jnp.float32)
+
+    def step(h, t_in):
+        xt, at, bt, ct = t_in
+        h = h * jnp.exp(at)[:, :, None, None] + jnp.einsum("bhd,bs->bhds", xt, bt)
+        y = jnp.einsum("bs,bhds->bhd", ct, h)
+        return h, y
+
+    xs = (xh.transpose(1, 0, 2, 3), a_log.transpose(1, 0, 2),
+          Bv.transpose(1, 0, 2), Cv.transpose(1, 0, 2))
+    h_last, ys = jax.lax.scan(step, h, xs)
+    return ys.transpose(1, 0, 2, 3), h_last

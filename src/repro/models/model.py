@@ -1,0 +1,429 @@
+"""Model assembly: scanned superblock stacks, train forward, KV-cache decode.
+
+The stack is ``block_unit * n_repeats`` (+ optional prologue layers). Per-slot
+params are stacked along the repeat axis and the repeat loop is a
+``jax.lax.scan`` with per-step remat -- one superblock of HLO regardless of
+depth, which keeps 96-layer/340B dry-run compiles tractable and bounds
+activation memory.
+
+Caches: per-slot stacked pytrees; decode scans (params, cache) pairs and
+emits updated cache slices. Attention caches for ``attn_local`` layers are
+ring buffers bounded by the window (what makes gemma-3 long_500k decodable).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import policy as precision_policy
+from repro.models.config import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba2, moe, rwkv6
+
+Params = Dict[str, Any]
+
+ATTN_KINDS = ("attn", "attn_local", "attn_global", "attn+moe", "shared_attn")
+
+
+# ---------------------------------------------------------------- init ------
+
+def init_block(key, kind: str, cfg: ArchConfig) -> Params:
+    if kind in ("attn", "attn_local", "attn_global", "attn+moe", "shared_attn"):
+        k1, k2 = jax.random.split(key)
+        p = {"ln1": L.init_rmsnorm(cfg.d_model),
+             "attn": L.init_attention(k1, cfg),
+             "ln2": L.init_rmsnorm(cfg.d_model)}
+        if kind == "attn+moe":
+            p["ffn"] = moe.init_moe(k2, cfg)
+        else:
+            p["ffn"] = L.init_mlp(k2, cfg)
+        return p
+    if kind == "mamba":
+        return {"ln": L.init_rmsnorm(cfg.d_model),
+                "mixer": mamba2.init_mamba(key, cfg)}
+    if kind == "rwkv":
+        return {"ln1": L.init_rmsnorm(cfg.d_model),
+                "ln2": L.init_rmsnorm(cfg.d_model),
+                "mixer": rwkv6.init_rwkv(key, cfg)}
+    raise ValueError(kind)
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    d, V = cfg.d_model, cfg.padded_vocab
+    p: Params = {
+        "embed": jax.random.normal(keys[0], (V, d), jnp.float32) * (d ** -0.5),
+        "final_norm": L.init_rmsnorm(d),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = jax.random.normal(keys[1], (d, V), jnp.float32) * (d ** -0.5)
+
+    # stacked superblock params: one vmapped init per slot
+    slot_params = []
+    for slot, kind in enumerate(cfg.block_unit):
+        slot_keys = jax.random.split(jax.random.fold_in(keys[2], slot), cfg.n_repeats)
+        slot_params.append(jax.vmap(lambda k: init_block(k, kind, cfg))(slot_keys))
+    p["blocks"] = tuple(slot_params)
+
+    if cfg.shared_attn_every:
+        p["shared_attn"] = init_block(keys[3], "shared_attn", cfg)
+    if getattr(cfg, "n_prologue", 0):
+        pro_keys = jax.random.split(keys[4], cfg.n_prologue)
+        p["prologue"] = jax.vmap(
+            lambda k: init_block(k, cfg.block_unit[0], cfg))(pro_keys)
+    return p
+
+
+# --------------------------------------------------------------- blocks -----
+
+def _window_for(kind: str, cfg: ArchConfig) -> Optional[int]:
+    return cfg.local_window if kind == "attn_local" else None
+
+
+def apply_block(kind: str, p: Params, x, cfg: ArchConfig, *, impl="chunked",
+                cache=None, pos=None, collect_kv: int = 0):
+    """One sub-layer. Returns (x, new_cache). ``collect_kv`` > 0 makes the
+    prefill path emit a decode cache of that capacity."""
+    if kind in ATTN_KINDS:
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        attn_cache = cache.get("attn") if cache else None
+        a, new_attn = L.apply_attention(
+            p["attn"], h, cfg, window=_window_for(kind, cfg), impl=impl,
+            cache=attn_cache, cache_len=pos, collect_kv=collect_kv)
+        x = x + a
+        h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if kind == "attn+moe":
+            f = moe.apply_moe(p["ffn"], h, cfg)
+        else:
+            f = L.apply_mlp(p["ffn"], h, cfg)
+        x = x + f
+        return x, ({"attn": new_attn} if new_attn is not None else None)
+    if kind == "mamba":
+        h = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+        m, new_c = mamba2.apply_mamba(p["mixer"], h, cfg, cache=cache,
+                                      collect=bool(collect_kv))
+        return x + m, new_c
+    if kind == "rwkv":
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        t_cache = ({"shift_t": cache["shift_t"], "wkv": cache["wkv"]}
+                   if cache else None)
+        t, new_t = rwkv6.apply_rwkv_time(p["mixer"], h, cfg, cache=t_cache,
+                                         collect=bool(collect_kv))
+        x = x + t
+        h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        c_cache = {"shift_c": cache["shift_c"]} if cache else None
+        c, new_c = rwkv6.apply_rwkv_channel(p["mixer"], h, cfg, cache=c_cache,
+                                            collect=bool(collect_kv))
+        x = x + c
+        new = None if new_t is None else {**new_t, **(new_c or {})}
+        return x, new
+    raise ValueError(kind)
+
+
+def _superblock(params_slots, x, cfg: ArchConfig, *, impl, shared_p,
+                step_idx, caches_slots=None, pos=None):
+    """Apply one superblock (all slots) + optional shared attention."""
+    from repro.parallel import context as pctx
+    from repro.parallel.sharding import constrain
+    new_caches = []
+    for slot, kind in enumerate(cfg.block_unit):
+        c = caches_slots[slot] if caches_slots is not None else None
+        x, nc = apply_block(kind, params_slots[slot], x, cfg, impl=impl,
+                            cache=c, pos=pos)
+        if pctx.ACT_SPEC is not None:
+            # re-anchor the residual layout after every block: keeps the TP
+            # row-parallel reduction a reduce-scatter (not a full all-reduce)
+            x = constrain(x, pctx.ACT_SPEC)
+        new_caches.append(nc)
+    if cfg.shared_attn_every:
+        fire = (step_idx % cfg.shared_attn_every) == (cfg.shared_attn_every - 1)
+        x = jax.lax.cond(
+            fire,
+            lambda x: apply_block("shared_attn", shared_p, x, cfg, impl=impl)[0],
+            lambda x: x,
+            x)
+    return x, (tuple(new_caches) if caches_slots is not None else None)
+
+
+# -------------------------------------------------------------- forward -----
+
+def hidden_forward(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
+                   embeddings: Optional[jax.Array] = None,
+                   impl: str = "chunked", remat: bool = True) -> jax.Array:
+    """Backbone forward: embeddings -> scanned superblocks -> final norm.
+    Returns the normed hidden states (B, S_total, d) in compute dtype."""
+    from repro.parallel import context as pctx
+    from repro.parallel.sharding import constrain
+    pol = precision_policy(cfg.policy)
+    cd = pol.compute_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    if embeddings is not None:
+        x = jnp.concatenate([embeddings.astype(cd), x], axis=1)
+    if pctx.ACT_SPEC is not None:
+        x = constrain(x, pctx.ACT_SPEC)
+
+    if "prologue" in params:
+        def pro_body(x, p_slice):
+            y, _ = apply_block(cfg.block_unit[0], p_slice, x, cfg, impl=impl)
+            return y, None
+        x, _ = jax.lax.scan(pro_body, x, params["prologue"])
+
+    shared_p = params.get("shared_attn")
+
+    def body(x, inp):
+        p_slots, step_idx = inp
+        y, _ = _superblock(p_slots, x, cfg, impl=impl, shared_p=shared_p,
+                           step_idx=step_idx)
+        if pctx.ACT_SPEC is not None:
+            y = constrain(y, pctx.ACT_SPEC)
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    steps = jnp.arange(cfg.n_repeats)
+    x, _ = jax.lax.scan(body, x, (params["blocks"], steps))
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
+            embeddings: Optional[jax.Array] = None, impl: str = "chunked",
+            remat: bool = True) -> jax.Array:
+    """Train/prefill forward. tokens: (B, S_text) int32; optional frontend
+    ``embeddings``: (B, S_front, d) prepended (vlm/audio stubs). Returns
+    logits (B, S_total, V) in f32."""
+    x = hidden_forward(params, tokens, cfg, embeddings=embeddings, impl=impl,
+                       remat=remat)
+    cd = x.dtype
+    unemb = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    return (x @ unemb.astype(cd)).astype(jnp.float32)
+
+
+def loss_fn(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
+            embeddings: Optional[jax.Array] = None, impl: str = "chunked",
+            seq_chunk: Optional[int] = None):
+    """Next-token cross-entropy over the token region.
+
+    ``seq_chunk``: compute logits + CE in sequence chunks under remat so the
+    (B, S, V) logits tensor is never materialized (essential for 256k-vocab
+    archs at 1M tokens/step)."""
+    from repro.parallel import context as pctx
+    from repro.parallel.sharding import constrain
+    h = hidden_forward(params, tokens, cfg, embeddings=embeddings, impl=impl)
+    if embeddings is not None:
+        h = h[:, embeddings.shape[1]:]
+    h = h[:, :-1]
+    tgt = tokens[:, 1:]
+    cd = h.dtype
+    unemb = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    unemb = unemb.astype(cd)
+
+    def ce(h_blk, tgt_blk):
+        logits = h_blk @ unemb
+        if pctx.LOGIT_SPEC is not None:
+            logits = constrain(logits, pctx.LOGIT_SPEC)
+        logits = logits.astype(jnp.float32)
+        if cfg.padded_vocab != cfg.vocab_size:  # mask pad ids out of the CE
+            pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+            logits = jnp.where(pad_mask, -1e30, logits)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(lp, tgt_blk[..., None], axis=-1)[..., 0]
+
+    Sm1 = h.shape[1]
+    if seq_chunk is None or seq_chunk >= Sm1:
+        return ce(h, tgt).mean()
+    n = Sm1 // seq_chunk
+    main, tail = h[:, : n * seq_chunk], h[:, n * seq_chunk:]
+    tgt_main, tgt_tail = tgt[:, : n * seq_chunk], tgt[:, n * seq_chunk:]
+    hc = main.reshape(h.shape[0], n, seq_chunk, -1).transpose(1, 0, 2, 3)
+    tc = tgt_main.reshape(tgt.shape[0], n, seq_chunk).transpose(1, 0, 2)
+
+    def body(acc, inp):
+        hb, tb = inp
+        return acc + ce(hb, tb).sum(), None
+
+    body = jax.checkpoint(body)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, tc))
+    if tail.shape[1]:
+        total = total + ce(tail, tgt_tail).sum()
+    return total / (h.shape[0] * Sm1)
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
+            max_seq: int, embeddings: Optional[jax.Array] = None,
+            impl: str = "chunked", cache_dtype=jnp.bfloat16):
+    """Serving prefill: forward over the prompt, emitting (last_logits,
+    decode cache filled to ``tokens`` length, next position)."""
+    pol = precision_policy(cfg.policy)
+    cd = pol.compute_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    if embeddings is not None:
+        x = jnp.concatenate([embeddings.astype(cd), x], axis=1)
+    S_total = x.shape[1]
+    shared_p = params.get("shared_attn")
+    cache: Dict[str, Any] = {}
+
+    if "prologue" in params:
+        def pro_body(x, p_slice):
+            y, c = apply_block(cfg.block_unit[0], p_slice, x, cfg, impl=impl,
+                               collect_kv=max_seq)
+            return y, c
+        x, pro_cache = jax.lax.scan(pro_body, x, params["prologue"])
+        cache["prologue"] = pro_cache
+
+    def body(x, inp):
+        p_slots, step_idx = inp
+        slot_caches = []
+        y = x
+        for slot, kind in enumerate(cfg.block_unit):
+            y, c = apply_block(kind, p_slots[slot], y, cfg, impl=impl,
+                               collect_kv=max_seq)
+            slot_caches.append(c)
+        if cfg.shared_attn_every:
+            fire = (step_idx % cfg.shared_attn_every) == (cfg.shared_attn_every - 1)
+            y2, c2 = apply_block("shared_attn", shared_p, y, cfg, impl=impl,
+                                 collect_kv=max_seq)
+            y = jnp.where(fire, y2, y)
+            slot_caches.append(c2)
+        return y, tuple(slot_caches)
+
+    steps = jnp.arange(cfg.n_repeats)
+    x, slot_caches = jax.lax.scan(body, x, (params["blocks"], steps))
+    cache["slots"] = slot_caches
+
+    x_last = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    unemb = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = (x_last @ unemb.astype(cd)).astype(jnp.float32)
+    # KV caches collected in compute dtype; convert to the decode cache dtype
+    cache = jax.tree.map(
+        lambda a: a.astype(cache_dtype) if a.dtype == cd else a, cache)
+    return logits, cache, jnp.asarray(S_total, jnp.int32)
+
+
+# --------------------------------------------------------------- decode -----
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Params:
+    """Stacked decode caches, one entry per slot (+ shared-attn slot)."""
+    d = cfg.d_model
+    hd, Hkv = cfg.hd, cfg.n_kv_heads
+
+    def attn_cache(window):
+        Lc = min(max_seq, window) if window else max_seq
+        return {"attn": {
+            "k": jnp.zeros((cfg.n_repeats, batch, Hkv, Lc, hd), dtype),
+            "v": jnp.zeros((cfg.n_repeats, batch, Hkv, Lc, hd), dtype)}}
+
+    def mamba_cache():
+        d_in = cfg.ssm_expand * d
+        nh = d_in // cfg.ssm_head_dim
+        conv_ch = d_in + 2 * cfg.ssm_state
+        return {"conv": jnp.zeros((cfg.n_repeats, batch, cfg.ssm_conv - 1, conv_ch), dtype),
+                "ssm": jnp.zeros((cfg.n_repeats, batch, nh, cfg.ssm_head_dim,
+                                  cfg.ssm_state), jnp.float32)}
+
+    def rwkv_cache():
+        nh = d // rwkv6.HEAD_DIM
+        return {"wkv": jnp.zeros((cfg.n_repeats, batch, nh, rwkv6.HEAD_DIM,
+                                  rwkv6.HEAD_DIM), jnp.float32),
+                "shift_t": jnp.zeros((cfg.n_repeats, batch, 1, d), dtype),
+                "shift_c": jnp.zeros((cfg.n_repeats, batch, 1, d), dtype)}
+
+    def slot_cache(kind, n):
+        if kind in ("attn", "attn_global", "attn+moe", "shared_attn"):
+            c = attn_cache(None)
+        elif kind == "attn_local":
+            c = attn_cache(cfg.local_window)
+        elif kind == "mamba":
+            c = mamba_cache()
+        elif kind == "rwkv":
+            c = rwkv_cache()
+        else:
+            raise ValueError(kind)
+        if n != cfg.n_repeats:  # re-stack with a different leading dim
+            c = jax.tree.map(lambda a: jnp.zeros((n,) + a.shape[1:], a.dtype), c)
+        return c
+
+    slots = [slot_cache(kind, cfg.n_repeats) for kind in cfg.block_unit]
+    if cfg.shared_attn_every:
+        slots.append(slot_cache("shared_attn", cfg.n_repeats))
+    out = {"slots": tuple(slots)}
+    if cfg.n_prologue:
+        out["prologue"] = slot_cache(cfg.block_unit[0], cfg.n_prologue)
+    return out
+
+
+def _decode_block_attn(kind, p, x, cfg, cache, pos, dtype):
+    """Attention decode with ring-buffer handling for local layers."""
+    window = _window_for(kind, cfg)
+    kc = cache["attn"]["k"]
+    Lc = kc.shape[2]
+    if window and Lc == window:
+        # ring buffer: write slot = pos % window; all filled slots visible
+        slot = pos % window
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        q, k1, v1 = L._qkv(p["attn"], h, cfg, jnp.full((1,), pos))
+        knew = jax.lax.dynamic_update_slice_in_dim(
+            kc, k1.astype(kc.dtype), slot, axis=2)
+        vnew = jax.lax.dynamic_update_slice_in_dim(
+            cache["attn"]["v"], v1.astype(kc.dtype), slot, axis=2)
+        from repro.kernels.flash_attention.ops import decode_attention
+        a = decode_attention(q, knew, vnew, kv_len=jnp.minimum(pos + 1, window))
+        a = a.transpose(0, 2, 1, 3).reshape(x.shape[0], 1, cfg.n_heads * cfg.hd)
+        x = x + a @ p["attn"]["wo"].astype(a.dtype)
+        h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        f = (moe.apply_moe(p["ffn"], h, cfg) if kind == "attn+moe"
+             else L.apply_mlp(p["ffn"], h, cfg))
+        return x + f, {"attn": {"k": knew, "v": vnew}}
+    return apply_block(kind, p, x, cfg, cache=cache, pos=pos)
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache, pos, tokens_1,
+                dtype=jnp.bfloat16) -> Tuple[jax.Array, Any]:
+    """One-token decode. tokens_1: (B, 1) int32; pos: () int32 current fill.
+    Returns (logits (B, 1, V) f32, new_cache)."""
+    pol = precision_policy(cfg.policy)
+    cd = pol.compute_dtype
+    x = jnp.take(params["embed"], tokens_1, axis=0).astype(cd)
+    shared_p = params.get("shared_attn")
+    new_cache = dict(cache)
+
+    if "prologue" in params:
+        def pro_body(x, inp):
+            p_slice, c_slice = inp
+            y, nc = apply_block(cfg.block_unit[0], p_slice, x, cfg,
+                                cache=c_slice, pos=pos)
+            return y, nc
+        x, pro_cache = jax.lax.scan(
+            pro_body, x, (params["prologue"], cache["prologue"]))
+        new_cache["prologue"] = pro_cache
+
+    def body(x, inp):
+        p_slots, c_slots, step_idx = inp
+        new_caches = []
+        y = x
+        for slot, kind in enumerate(cfg.block_unit):
+            c = c_slots[slot]
+            if kind in ATTN_KINDS:
+                y, nc = _decode_block_attn(kind, p_slots[slot], y, cfg, c, pos, dtype)
+            else:
+                y, nc = apply_block(kind, p_slots[slot], y, cfg, cache=c, pos=pos)
+            new_caches.append(nc)
+        if cfg.shared_attn_every:
+            fire = (step_idx % cfg.shared_attn_every) == (cfg.shared_attn_every - 1)
+            c = c_slots[-1]
+            y2, nc = _decode_block_attn("shared_attn", shared_p, y, cfg, c, pos, dtype)
+            y = jnp.where(fire, y2, y)
+            nc = jax.tree.map(lambda new, old: jnp.where(fire, new, old), nc, c)
+            new_caches.append(nc)
+        return y, tuple(new_caches)
+
+    steps = jnp.arange(cfg.n_repeats)
+    x, slot_caches = jax.lax.scan(
+        body, x, (params["blocks"], cache["slots"], steps))
+    new_cache["slots"] = slot_caches
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    unemb = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    return (x @ unemb.astype(cd)).astype(jnp.float32), new_cache

@@ -1,0 +1,145 @@
+"""Mixture-of-Experts with SU-indirection dispatch (Llama-4 style).
+
+This is where the paper's technique is first-class in the LM stack: routing
+tokens to experts *is* a sparse-dense product. The router's expert-assignment
+indices form the SU index stream; dispatch gathers token rows by index
+(`indirect_gather`), the grouped expert GEMM consumes dense (E, C, d) tiles,
+and combine scatters results back (`indirect_scatter_add`). The block-sparse
+formulation (BCSR over the dispatch matrix) runs on the SpMM Pallas kernel in
+``benchmarks/bench_moe.py``.
+
+Capacity-based dropless-approx routing (Switch-style): per-expert capacity
+C = ceil(T/E * capacity_factor); overflow tokens are dropped (contribute
+zero), standard at scale. Expert-parallel: the leading E dim of expert
+weights shards over the "model" axis; the gather/scatter becomes an
+all-to-all under pjit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.su import indirect_gather
+from repro.models.config import ArchConfig
+from repro.models.layers import init_mlp, apply_mlp
+
+
+def init_moe(key, cfg: ArchConfig):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k_r, k_e, k_s = jax.random.split(key, 3)
+    s = d ** -0.5
+    n_w = 3 if cfg.mlp_type == "swiglu" else 2
+    keys = jax.random.split(k_e, n_w)
+    if cfg.mlp_type == "swiglu":
+        experts = {
+            "w_gate": jax.random.normal(keys[0], (E, d, ff), jnp.float32) * s,
+            "w_up": jax.random.normal(keys[1], (E, d, ff), jnp.float32) * s,
+            "w_down": jax.random.normal(keys[2], (E, ff, d), jnp.float32) * (ff ** -0.5),
+        }
+    else:
+        experts = {
+            "w_up": jax.random.normal(keys[0], (E, d, ff), jnp.float32) * s,
+            "w_down": jax.random.normal(keys[1], (E, ff, d), jnp.float32) * (ff ** -0.5),
+        }
+    p = {"router": jax.random.normal(k_r, (d, E), jnp.float32) * s,
+         "experts": experts}
+    if cfg.moe_shared_expert:
+        p["shared"] = init_mlp(k_s, cfg)
+    return p
+
+
+def _expert_ffn(experts, xe, mlp_type: str):
+    """xe: (E, C, d) -> (E, C, d); batched over the expert dim (EP shards it)."""
+    cd = xe.dtype
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, experts["w_gate"].astype(cd)))
+        h = h * jnp.einsum("ecd,edf->ecf", xe, experts["w_up"].astype(cd))
+    else:
+        h = jnp.square(jax.nn.relu(
+            jnp.einsum("ecd,edf->ecf", xe, experts["w_up"].astype(cd))))
+    return jnp.einsum("ecf,efd->ecd", h, experts["w_down"].astype(cd))
+
+
+def apply_moe(p, x, cfg: ArchConfig, *, groups: int = None):
+    """x: (B, S, d) -> (B, S, d). Top-1 routing (per pool spec) w/ capacity.
+
+    Grouped dispatch: tokens are viewed as (G, T/G) where G matches the data
+    shards; routing slots are computed *within* each group so the cumsum
+    stays shard-local, and the only cross-shard movement is the (E, G, Cg, d)
+    dispatch -- the EP all-to-all. (The naive global-cumsum formulation
+    serializes the whole token stream through one device; measured in
+    EXPERIMENTS.md SPerf.)
+    """
+    from repro.parallel import context as pctx
+    from repro.parallel.sharding import constrain
+
+    if pctx.MOE_IMPL == "shard_map" and pctx.MESH is not None:
+        from repro.models.moe_shard_map import apply_moe_shard_map
+        from repro.parallel.sharding import FSDP
+        dp_axes = tuple(a for a in FSDP if a in pctx.MESH.axis_names)
+        dp_axes = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        return apply_moe_shard_map(p, x, cfg, pctx.MESH, dp_axes=dp_axes,
+                                   tp_axis="model")
+
+    B, S, d = x.shape
+    E = cfg.n_experts
+    T = B * S
+    G = groups or pctx.MOE_GROUPS or 1
+    if T % G or (T // G) < 1:
+        G = 1
+    Tg = T // G
+    Cg = max(1, int(Tg / E * cfg.capacity_factor))
+    xt = x.reshape(G, Tg, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)               # (G, Tg, E)
+    gate, expert_id = jax.lax.top_k(probs, 1)             # top-1 per pool spec
+    gate, expert_id = gate[..., 0], expert_id[..., 0]     # (G, Tg)
+
+    # Slot within the (group, expert) queue; overflow tokens drop (std. at
+    # scale). Cumsum is per-group => shard-local under dp sharding of G.
+    onehot = jax.nn.one_hot(expert_id, E, dtype=jnp.int32)       # (G, Tg, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=1) - 1) * onehot
+    slot = pos_in_e.sum(axis=-1)                                  # (G, Tg)
+    keep = slot < Cg
+
+    # --- SU dispatch: index stream (expert*Cg + slot) per group ------------
+    flat_slot = jnp.where(keep, expert_id * Cg + slot, E * Cg)    # drop -> pad
+    inv = jnp.full((G, E * Cg + 1), Tg, jnp.int32)
+    inv = inv.at[jnp.arange(G)[:, None], flat_slot].set(
+        jnp.broadcast_to(jnp.arange(Tg, dtype=jnp.int32), (G, Tg)),
+        mode="drop")[:, : E * Cg]
+    xt_pad = jnp.concatenate([xt, jnp.zeros((G, 1, d), xt.dtype)], axis=1)
+    xe = jnp.take_along_axis(xt_pad, inv[..., None], axis=1)      # (G, E*Cg, d)
+    xe = xe.reshape(G, E, Cg, d).transpose(1, 0, 2, 3)            # (E, G, Cg, d)
+    if pctx.MOE_SPEC is not None:
+        xe = constrain(xe, pctx.MOE_SPEC)                         # EP all-to-all
+
+    ye = _expert_ffn(p["experts"], xe.reshape(E, G * Cg, d),
+                     cfg.mlp_type).reshape(E, G, Cg, d)
+
+    # --- SU combine: inverse all-to-all + gather back by the same stream ---
+    # Constrain BACK to the dispatch (group-sharded) layout before the gather:
+    # each token's result lives on exactly one expert shard, so the reshard is
+    # an all-to-all; gathering straight from the EP layout instead makes GSPMD
+    # emit a full-activation all-reduce per layer (measured: 5.4 GB -> 34 MB
+    # per layer on llama4-scout train_4k).
+    ye = ye.transpose(1, 0, 2, 3).reshape(G, E * Cg, d)
+    if pctx.MOE_COMBINE_SPEC is not None:
+        ye = constrain(ye, pctx.MOE_COMBINE_SPEC)
+    ye_pad = jnp.concatenate([ye, jnp.zeros((G, 1, d), ye.dtype)], axis=1)
+    back = jnp.take_along_axis(
+        ye_pad, jnp.minimum(flat_slot, E * Cg)[..., None], axis=1)
+    out = back * (gate * keep).astype(back.dtype)[..., None]
+
+    if cfg.moe_shared_expert:
+        out = out + apply_mlp(p["shared"], xt.reshape(T, d), cfg).reshape(G, Tg, d)
+    return out.reshape(B, S, d)
+
+
+def load_balance_loss(logits: jax.Array, expert_id: jax.Array, E: int):
+    """Switch-style auxiliary loss (fraction-routed x mean-prob)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(expert_id, E, dtype=jnp.float32), axis=0)
+    mean_p = jnp.mean(probs, axis=0)
+    return E * jnp.sum(frac * mean_p)

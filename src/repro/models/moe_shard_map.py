@@ -1,0 +1,114 @@
+"""shard_map MoE: explicit EP all-to-all dispatch (the optimized path).
+
+Hypothesis (EXPERIMENTS.md SPerf-C): under pjit, the combine gather's
+*backward* is a scatter-add of model-sharded cotangents into a data-sharded
+buffer, which GSPMD lowers to a full-activation f32 all-reduce per MoE layer
+(~193 GB/step on llama4-scout train_4k). Writing the dispatch as an explicit
+``jax.lax.all_to_all`` inside ``shard_map`` bounds the traffic to the
+capacity buffers by construction -- and ``all_to_all``'s transpose is
+``all_to_all``, so the backward moves the same bounded bytes.
+
+Layout inside shard_map (mesh axes dp = ("pod","data") merged, tp = "model"):
+  x block: (B_loc, S_loc, d)  [B over dp, S over tp (SP)]
+  experts: E split over tp; d split over dp (FSDP -> all_gather on entry,
+           psum_scatter on the gradient by AD of all_gather).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.layers import apply_mlp
+
+
+def _local_dispatch(xt, router, E: int, cap: int, cf: float):
+    """Route local tokens into (E, cap, d) buckets; returns (xe, combine)."""
+    T, d = xt.shape
+    logits = xt.astype(jnp.float32) @ router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_id = jax.lax.top_k(probs, 1)
+    gate, expert_id = gate[:, 0], expert_id[:, 0]
+    onehot = jax.nn.one_hot(expert_id, E, dtype=jnp.int32)
+    slot = ((jnp.cumsum(onehot, axis=0) - 1) * onehot).sum(-1)
+    keep = slot < cap
+    flat = jnp.where(keep, expert_id * cap + slot, E * cap)
+    inv = jnp.full((E * cap + 1,), T, jnp.int32).at[flat].set(
+        jnp.arange(T, dtype=jnp.int32), mode="drop")[: E * cap]
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xe = jnp.take(xt_pad, inv, axis=0).reshape(E, cap, d)
+    return xe, (flat, gate, keep)
+
+
+def _local_combine(ye, flat, gate, keep, E: int, cap: int):
+    ye_flat = ye.reshape(E * cap, -1)
+    ye_pad = jnp.concatenate(
+        [ye_flat, jnp.zeros((1, ye_flat.shape[1]), ye_flat.dtype)], axis=0)
+    back = jnp.take(ye_pad, jnp.minimum(flat, E * cap), axis=0)
+    return back * (gate * keep).astype(back.dtype)[:, None]
+
+
+def apply_moe_shard_map(p, x, cfg: ArchConfig, mesh, *, dp_axes, tp_axis):
+    """x: (B, S, d) -> (B, S, d) with explicit EP all-to-all."""
+    E = cfg.n_experts
+    tp = mesh.shape[tp_axis]
+    assert E % tp == 0, (E, tp)
+
+    def body(x_blk, router, experts, shared):
+        # x_blk: (B_loc, S_loc, d) -- local tokens
+        Bl, Sl, d = x_blk.shape
+        T = Bl * Sl
+        xt = x_blk.reshape(T, d)
+        cap = max(1, int(T / E * cfg.capacity_factor))
+        xe, combine_state = _local_dispatch(xt, router, E, cap, cfg.capacity_factor)
+
+        # EP all-to-all: split the expert dim over tp peers, concat capacity.
+        # (E, cap, d) -> (E/tp, tp*cap, d): this shard now holds *its* experts'
+        # tokens from every sequence-peer. all_to_all's transpose is
+        # all_to_all -> bounded backward traffic by construction.
+        xe = jax.lax.all_to_all(xe, tp_axis, 0, 1, tiled=True)
+
+        # FSDP gather of this shard's expert weights over dp (bf16 operands;
+        # AD turns this into psum_scatter on the weight gradient = ZeRO-3)
+        cd = x_blk.dtype
+        gather_axis = {"w_gate": 1, "w_up": 1, "w_down": 2}
+        w = {k: jax.lax.all_gather(v.astype(cd), dp_axes,
+                                   axis=gather_axis[k], tiled=True)
+             for k, v in experts.items()}
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w["w_gate"])) \
+            * jnp.einsum("ecd,edf->ecf", xe, w["w_up"]) \
+            if cfg.mlp_type == "swiglu" else \
+            jnp.square(jax.nn.relu(jnp.einsum("ecd,edf->ecf", xe, w["w_up"])))
+        ye = jnp.einsum("ecf,efd->ecd", h, w["w_down"])
+
+        # inverse all-to-all back to the dispatch layout
+        ye = jax.lax.all_to_all(ye, tp_axis, 1, 0, tiled=True)
+        out = _local_combine(ye, *combine_state, E, cap).reshape(Bl, Sl, d)
+        if cfg.moe_shared_expert:
+            sh = {k: jax.lax.all_gather(v.astype(cd), dp_axes, axis=0,
+                                        tiled=True)
+                  for k, v in shared.items()}
+            # shared expert weights are (d, ff)/(ff, d) FSDP-sharded on dim 0
+            hh = jax.nn.silu(xt @ sh["w_gate"]) * (xt @ sh["w_up"]) \
+                if cfg.mlp_type == "swiglu" else \
+                jnp.square(jax.nn.relu(xt @ sh["w_up"]))
+            out = out + (hh @ sh["w_down"]).reshape(Bl, Sl, d)
+        return out
+
+    dp = dp_axes
+    shared = p.get("shared", {k: jnp.zeros((), x.dtype) for k in ()}) or {}
+    in_specs = (
+        P(dp, tp_axis, None),                        # x: B over dp, S over tp
+        P(None, None),                               # router replicated
+        {k: P(tp_axis, dp, None) if k in ("w_gate", "w_up")
+         else P(tp_axis, None, dp) for k in p["experts"]},
+        {k: P(dp, None) if k in ("w_gate", "w_up") else P(dp, None)
+         for k in shared},
+    )
+    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                       out_specs=P(dp, tp_axis, None))
+    return fn(x, p["router"], p["experts"], shared)

@@ -1,0 +1,188 @@
+"""RWKV-6 "Finch" mixer: attention-free, data-dependent per-channel decay.
+
+Recurrence (per head, state S in R^{hd x hd}):
+  S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+  y_t = r_t S_{t-1} + (r_t . (u (*) k_t)) v_t
+with w_t = exp(-exp(w0 + lora(x~_t))) -- the *data-dependent decay* that is
+the paper's headline feature. Chunked parallel form mirrors ssd_chunked (the
+decay is a per-channel vector rather than a scalar per head); log-space
+cumulative sums keep the decay divisions stable.
+
+``rwkv_scan_ref`` is the sequential oracle for tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import init_rmsnorm, rmsnorm
+
+LORA_R = 64
+HEAD_DIM = 64
+
+
+def init_rwkv(key, cfg: ArchConfig):
+    d = cfg.d_model
+    nh = d // HEAD_DIM
+    ks = jax.random.split(key, 12)
+    s = d ** -0.5
+    return {
+        # time-mix static lerp factors for r,k,v,g + the decay channel
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),
+        "w_r": jax.random.normal(ks[0], (d, d), jnp.float32) * s,
+        "w_k": jax.random.normal(ks[1], (d, d), jnp.float32) * s,
+        "w_v": jax.random.normal(ks[2], (d, d), jnp.float32) * s,
+        "w_g": jax.random.normal(ks[3], (d, d), jnp.float32) * s,
+        "w_o": jax.random.normal(ks[4], (d, d), jnp.float32) * s,
+        # data-dependent decay: w0 + lora
+        "decay_base": -6.0 * jnp.ones((d,), jnp.float32),
+        "decay_lora_a": jax.random.normal(ks[5], (d, LORA_R), jnp.float32) * s,
+        "decay_lora_b": jax.random.normal(ks[6], (LORA_R, d), jnp.float32) * (LORA_R ** -0.5) * 0.1,
+        "bonus_u": jax.random.normal(ks[7], (nh, HEAD_DIM), jnp.float32) * 0.1,
+        "ln_x": init_rmsnorm(d),
+        # channel mix
+        "mu_c": 0.5 * jnp.ones((2, d), jnp.float32),
+        "w_ck": jax.random.normal(ks[8], (d, cfg.d_ff), jnp.float32) * s,
+        "w_cv": jax.random.normal(ks[9], (cfg.d_ff, d), jnp.float32) * (cfg.d_ff ** -0.5),
+        "w_cr": jax.random.normal(ks[10], (d, d), jnp.float32) * s,
+    }
+
+
+def _token_shift(x, prev=None):
+    """(B,T,d) -> previous-token stream; ``prev``: (B,1,d) decode carry."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def wkv_chunked(r, k, v, w_log, u, *, chunk: int = 32, s0=None):
+    """Chunked WKV. r,k,v: (B,T,nh,hd); w_log: (B,T,nh,hd) (<0);
+    u: (nh,hd). Returns (y (B,T,nh,hd), S_final (B,nh,hd,hd))."""
+    B, T, nh, hd = r.shape
+    pad = (-T) % chunk
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, zp), jnp.pad(k, zp), jnp.pad(v, zp)
+        w_log = jnp.pad(w_log, zp)
+    Tp = T + pad
+    nc = Tp // chunk
+    rc = r.reshape(B, nc, chunk, nh, hd)
+    kc = k.reshape(B, nc, chunk, nh, hd)
+    vc = v.reshape(B, nc, chunk, nh, hd)
+    wc = w_log.reshape(B, nc, chunk, nh, hd)
+    cum = jnp.cumsum(wc, axis=2)                     # inclusive log-decay sums
+
+    # intra-chunk: y_i += sum_{j<i} (r_i*exp(cum_{i-1}-cum_j)) . k_j  v_j
+    #   exp(cum_{i-1}-cum_j) = exp(cum_i - w_i - cum_j)
+    # mid-chunk rescale: referencing both factors to cum[mid] bounds each
+    # exponent by a *half*-chunk decay sum, keeping Q=128 inside f32 range
+    # even at the decay clamp (exp(64) ~ 6e27 << f32 max). Validated against
+    # the sequential oracle with clamp-saturating decays in tests.
+    ri = rc * jnp.exp(cum - wc)                      # (B,nc,Q,nh,hd), exp<=0
+    mid = cum[:, :, chunk // 2 : chunk // 2 + 1]     # (B,nc,1,nh,hd)
+    ri_s = rc * jnp.exp(cum - wc - mid)
+    kj_s = kc * jnp.exp(mid - cum)
+    att = jnp.einsum("bciht,bcjht->bchij", ri_s, kj_s)  # (B,nc,nh,Q,Q)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    att = jnp.where(mask[None, None, None], att, 0.0)
+    y = jnp.einsum("bchij,bcjhd->bcihd", att, vc)
+    # diagonal bonus: (r_i . (u*k_i)) v_i
+    diag = jnp.einsum("bciht,ht,bciht->bcih", rc, u, kc)
+    y = y + diag[..., None] * vc
+
+    # chunk-final states: S_c = diag(exp(cum_Q)) S_0-part + sum_j exp(cum_Q-cum_j) k_j (x) v_j
+    decay_out = jnp.exp(cum[:, :, -1:, :, :] - cum)  # (B,nc,Q,nh,hd)
+    S = jnp.einsum("bcjht,bcjhd->bchtd", kc * decay_out, vc)  # (B,nc,nh,hd,hd)
+    w_tot = jnp.exp(cum[:, :, -1])                   # (B,nc,nh,hd)
+
+    if s0 is None:
+        s0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+
+    def step(s, inp):
+        wt, Sc = inp                                 # (B,nh,hd), (B,nh,hd,hd)
+        s = s * wt[..., None] + Sc
+        return s, s
+
+    s_last, s_all = jax.lax.scan(
+        step, s0, (w_tot.transpose(1, 0, 2, 3), S.transpose(1, 0, 2, 3, 4)))
+    s_prev = jnp.concatenate([s0[None], s_all[:-1]], axis=0)
+    s_prev = s_prev.transpose(1, 0, 2, 3, 4)         # (B,nc,nh,hd,hd)
+
+    # inter-chunk: y_i += (r_i * exp(cum_{i-1})) S_prev
+    y = y + jnp.einsum("bciht,bchtd->bcihd", ri, s_prev)
+    return y.reshape(B, Tp, nh, hd)[:, :T], s_last
+
+
+def apply_rwkv_time(p, x, cfg: ArchConfig, *, cache=None, chunk: int = 128,
+                    collect: bool = False):
+    """Time-mix half. ``cache``: dict(shift_t (B,1,d), wkv (B,nh,hd,hd)).
+    ``collect`` returns the prefill-final cache. Returns (out, new_cache)."""
+    B, T, d = x.shape
+    nh = d // HEAD_DIM
+    prev_t = cache["shift_t"] if cache is not None else None
+    xx = _token_shift(x, prev_t)
+    mix = lambda i: x + (xx - x) * p["mu"][i].astype(x.dtype)
+    xr, xk, xv, xg, xw = (mix(i) for i in range(5))
+    cd = x.dtype
+    r = (xr @ p["w_r"].astype(cd)).reshape(B, T, nh, HEAD_DIM).astype(jnp.float32)
+    k = (xk @ p["w_k"].astype(cd)).reshape(B, T, nh, HEAD_DIM).astype(jnp.float32)
+    v = (xv @ p["w_v"].astype(cd)).reshape(B, T, nh, HEAD_DIM).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["w_g"].astype(cd))
+    # data-dependent decay (the Finch mechanism). Clamped below so the
+    # chunked factorization exp(-cum_j) stays within f32 range (the masked
+    # i<j region of `att` is bounded by exp(chunk * clamp)).
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["decay_lora_a"]) @ p["decay_lora_b"]
+    w_log = -jnp.exp(p["decay_base"] + lora)         # (B,T,d) < 0
+    w_log = jnp.maximum(w_log, -1.0)
+    w_log = w_log.reshape(B, T, nh, HEAD_DIM)
+
+    if cache is None:
+        y, s_last = wkv_chunked(r, k, v, w_log, p["bonus_u"], chunk=chunk)
+        new_cache = ({"wkv": s_last, "shift_t": x[:, -1:]} if collect else None)
+    else:
+        s0 = cache["wkv"]
+        rt, kt, vt = r[:, 0], k[:, 0], v[:, 0]       # (B,nh,hd)
+        y1 = jnp.einsum("bht,bhtd->bhd", rt, s0)
+        bonus = jnp.einsum("bht,ht,bht->bh", rt, p["bonus_u"], kt)
+        y = (y1 + bonus[..., None] * vt)[:, None]
+        s_last = s0 * jnp.exp(w_log[:, 0])[..., None] + \
+            jnp.einsum("bht,bhd->bhtd", kt, vt)
+        new_cache = {"wkv": s_last, "shift_t": x[:, -1:]}
+
+    y = y.reshape(B, T, d).astype(cd)
+    y = rmsnorm(p["ln_x"], y, cfg.norm_eps) * g
+    return y @ p["w_o"].astype(cd), new_cache
+
+
+def apply_rwkv_channel(p, x, cfg: ArchConfig, *, cache=None,
+                       collect: bool = False):
+    """Channel-mix half (squared-relu FFN over token-shifted mix).
+    ``cache``: dict(shift_c (B,1,d))."""
+    cd = x.dtype
+    prev_c = cache["shift_c"] if cache is not None else None
+    xx = _token_shift(x, prev_c)
+    xk2 = x + (xx - x) * p["mu_c"][0].astype(cd)
+    xr2 = x + (xx - x) * p["mu_c"][1].astype(cd)
+    kk = jnp.square(jax.nn.relu(xk2 @ p["w_ck"].astype(cd)))
+    out = jax.nn.sigmoid(xr2 @ p["w_cr"].astype(cd)) * (kk @ p["w_cv"].astype(cd))
+    new_cache = ({"shift_c": x[:, -1:]} if (cache is not None or collect)
+                 else None)
+    return out, new_cache
+
+
+def rwkv_scan_ref(r, k, v, w_log, u, s0=None):
+    """Sequential oracle for wkv_chunked (tests only)."""
+    B, T, nh, hd = r.shape
+    s = s0 if s0 is not None else jnp.zeros((B, nh, hd, hd), jnp.float32)
+
+    def step(s, t_in):
+        rt, kt, vt, wt = t_in
+        y = jnp.einsum("bht,bhtd->bhd", rt, s) + \
+            jnp.einsum("bht,ht,bht->bh", rt, u, kt)[..., None] * vt
+        s = s * jnp.exp(wt)[..., None] + jnp.einsum("bht,bhd->bhtd", kt, vt)
+        return s, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w_log))
+    s_last, ys = jax.lax.scan(step, s, xs)
+    return ys.transpose(1, 0, 2, 3), s_last

@@ -1,0 +1,38 @@
+"""Trace-time activation-sharding hints.
+
+Step builders (repro.launch.steps) set these before tracing; model code reads
+them through ``repro.parallel.sharding.constrain``. They are PartitionSpecs
+(not shardings), resolved against the ambient mesh by pjit. ``None`` = leave
+placement to the SPMD partitioner.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+from jax.sharding import PartitionSpec as P
+
+ACT_SPEC: Optional[P] = None   # residual stream (B, S, d)
+MOE_SPEC: Optional[P] = None   # dispatched expert tiles (E, G, Cg, d)
+LOGIT_SPEC: Optional[P] = None  # logits (B, S, V)
+MOE_GROUPS: Optional[int] = None  # dispatch groups (= data shards)
+MOE_COMBINE_SPEC: Optional[P] = None  # post-expert tiles (G, E*Cg, d)
+MOE_IMPL: str = "pjit"                # "pjit" | "shard_map" (SPerf-C)
+MESH = None                           # concrete mesh for shard_map paths
+
+
+@contextlib.contextmanager
+def activation_specs(act: Optional[P] = None, moe: Optional[P] = None,
+                     logit: Optional[P] = None, moe_groups: Optional[int] = None,
+                     moe_combine: Optional[P] = None, moe_impl: str = "pjit",
+                     mesh=None):
+    global ACT_SPEC, MOE_SPEC, LOGIT_SPEC, MOE_GROUPS, MOE_COMBINE_SPEC,         MOE_IMPL, MESH
+    prev = (ACT_SPEC, MOE_SPEC, LOGIT_SPEC, MOE_GROUPS, MOE_COMBINE_SPEC,
+            MOE_IMPL, MESH)
+    ACT_SPEC, MOE_SPEC, LOGIT_SPEC, MOE_GROUPS, MOE_COMBINE_SPEC,         MOE_IMPL, MESH = (act, moe, logit, moe_groups, moe_combine,
+                          moe_impl, mesh)
+    try:
+        yield
+    finally:
+        (ACT_SPEC, MOE_SPEC, LOGIT_SPEC, MOE_GROUPS, MOE_COMBINE_SPEC,
+         MOE_IMPL, MESH) = prev

@@ -1,0 +1,63 @@
+"""Flash attention kernel vs. full-softmax oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops
+from repro.kernels.flash_attention.ref import attention_ref
+
+RNG = np.random.default_rng(3)
+
+
+def _qkv(B, Hq, Hkv, S, D, dtype=jnp.float32):
+    q = jnp.asarray(RNG.standard_normal((B, Hq, S, D)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, Hkv, S, D)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, Hkv, S, D)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("S", [128, 256])
+@pytest.mark.parametrize("heads", [(4, 4), (8, 2)])  # MHA and GQA
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_basic(S, heads, causal):
+    Hq, Hkv = heads
+    q, k, v = _qkv(2, Hq, Hkv, S, 64)
+    got = ops.attention(q, k, v, causal=causal, bq=128, bk=128, interpret=True)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_flash_sliding_window():
+    q, k, v = _qkv(1, 4, 2, 256, 32)
+    got = ops.attention(q, k, v, causal=True, window=64, bq=64, bk=64,
+                        interpret=True)
+    want = attention_ref(q, k, v, causal=True, window=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_flash_unaligned_seq():
+    q, k, v = _qkv(1, 2, 2, 200, 32)
+    got = ops.attention(q, k, v, causal=True, bq=128, bk=128, interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_flash_bf16():
+    q, k, v = _qkv(1, 4, 4, 128, 64, jnp.bfloat16)
+    got = ops.attention(q, k, v, causal=True, interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=5e-2, rtol=5e-2)
+
+
+def test_decode_attention_matches_full():
+    B, Hq, Hkv, S, D = 2, 4, 2, 64, 32
+    q, k, v = _qkv(B, Hq, Hkv, S, D)
+    full = attention_ref(q, k, v, causal=True)
+    q_last = q[:, :, -1:, :]
+    dec = ops.decode_attention(q_last, k, v, kv_len=np.full((B,), S))
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, :, -1:, :]),
+                               atol=2e-3, rtol=2e-3)

@@ -1,0 +1,205 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import (INVALID_KEY, bcsr_from_dense, coo_from_dense,
+                                csr_from_dense)
+from repro.core.su import (intersect, intersect_dot, stream_densify,
+                           topk_sparsify, union_add)
+from repro.core.stencils import STENCILS, apply_reference
+from repro.kernels.spmm import ops as spmm_ops
+from repro.kernels.spmm.ref import spmm_ref
+from repro.kernels.stencil import ops as stencil_ops
+from repro.models.layers import chunked_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+SET = settings(max_examples=25, deadline=None)
+
+
+def _pad_sorted(arr, cap):
+    out = np.full(cap, INVALID_KEY, np.int32)
+    out[: len(arr)] = np.sort(arr)
+    return jnp.asarray(out)
+
+
+@SET
+@given(st.data())
+def test_intersect_matches_numpy(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    na = data.draw(st.integers(0, 60))
+    nb = data.draw(st.integers(0, 60))
+    a = rng.choice(200, size=na, replace=False).astype(np.int32)
+    b = rng.choice(200, size=nb, replace=False).astype(np.int32)
+    res = intersect(_pad_sorted(a, 64), _pad_sorted(b, 64))
+    got = np.asarray(res.keys)[: int(res.count)]
+    np.testing.assert_array_equal(got, np.intersect1d(a, b))
+
+
+@SET
+@given(st.data())
+def test_union_add_is_dense_addition(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    na = data.draw(st.integers(0, 48))
+    nb = data.draw(st.integers(0, 48))
+    D = 128
+    ia = rng.choice(D, size=na, replace=False)
+    ib = rng.choice(D, size=nb, replace=False)
+    va = rng.standard_normal(na).astype(np.float32)
+    vb = rng.standard_normal(nb).astype(np.float32)
+    pa, pb = _pad_sorted(ia, 64), _pad_sorted(ib, 64)
+    fa = np.zeros(64, np.float32)
+    fa[: na] = va[np.argsort(ia)] if na else va
+    fb = np.zeros(64, np.float32)
+    fb[: nb] = vb[np.argsort(ib)] if nb else vb
+    u = union_add(pa, jnp.asarray(fa), pb, jnp.asarray(fb))
+    dense = np.zeros(D, np.float32)
+    dense[ia] += va
+    dense[ib] += vb
+    got = np.asarray(stream_densify(u.keys, u.values, u.count, D))
+    np.testing.assert_allclose(got, dense, atol=1e-5)
+
+
+@SET
+@given(st.data())
+def test_intersect_dot_is_sparse_dot(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    D = 96
+    na = data.draw(st.integers(1, 40))
+    nb = data.draw(st.integers(1, 40))
+    ia = np.sort(rng.choice(D, size=na, replace=False))
+    ib = np.sort(rng.choice(D, size=nb, replace=False))
+    va = rng.standard_normal(64).astype(np.float32)
+    vb = rng.standard_normal(64).astype(np.float32)
+    got = intersect_dot(_pad_sorted(ia, 64), jnp.asarray(va),
+                        _pad_sorted(ib, 64), jnp.asarray(vb))
+    da = np.zeros(D); da[ia] = va[: na]
+    db = np.zeros(D); db[ib] = vb[: nb]
+    np.testing.assert_allclose(float(got), float(da @ db), rtol=1e-4,
+                               atol=1e-4)
+
+
+@SET
+@given(st.data())
+def test_topk_plus_error_reconstructs(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    D = data.draw(st.integers(16, 256))
+    k = data.draw(st.integers(1, D))
+    g = jnp.asarray(rng.standard_normal(D), jnp.float32)
+    keys, vals = topk_sparsify(g, k)
+    dense = stream_densify(keys, vals, jnp.asarray(k), D)
+    err = g - dense
+    # top-k keeps the k largest magnitudes: error max <= kept min
+    kept_min = float(jnp.abs(vals).min())
+    assert float(jnp.abs(err).max()) <= kept_min + 1e-6
+    np.testing.assert_allclose(np.asarray(dense + err), np.asarray(g),
+                               atol=1e-6)
+
+
+@SET
+@given(st.data())
+def test_sparse_format_roundtrips(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    m = data.draw(st.sampled_from([8, 16, 32]))
+    n = data.draw(st.sampled_from([8, 16, 64]))
+    density = data.draw(st.floats(0.0, 0.6))
+    dense = np.where(rng.random((m, n)) < density,
+                     rng.standard_normal((m, n)), 0).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(csr_from_dense(dense).todense()), dense)
+    np.testing.assert_allclose(np.asarray(bcsr_from_dense(dense, (8, 8)).todense()), dense)
+    np.testing.assert_allclose(
+        np.asarray(coo_from_dense(dense, capacity=dense.size).todense()), dense)
+
+
+@SET
+@given(st.data())
+def test_spmm_kernel_matches_oracle(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    gm = data.draw(st.integers(2, 6))
+    gk = data.draw(st.integers(2, 6))
+    density = data.draw(st.floats(0.05, 0.9))
+    dense = np.where(rng.random((gm * 8, gk * 8)) < density,
+                     rng.standard_normal((gm * 8, gk * 8)), 0).astype(np.float32)
+    a = bcsr_from_dense(dense, (8, 8))
+    b = jnp.asarray(rng.standard_normal((gk * 8, 128)), jnp.float32)
+    got = spmm_ops.spmm(a, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(spmm_ref(a, b)),
+                               atol=1e-4, rtol=1e-4)
+
+
+@SET
+@given(st.data())
+def test_stencil_kernel_matches_oracle(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    name = data.draw(st.sampled_from(["j2d5pt", "j2d9pt"]))
+    spec = STENCILS[name]
+    h = data.draw(st.integers(9, 40))
+    w = data.draw(st.integers(9, 40))
+    grid = jnp.asarray(rng.standard_normal(
+        (h + 2 * spec.radius, w + 2 * spec.radius)), jnp.float32)
+    got = stencil_ops.apply(grid, spec, tile=(8, 128), interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(apply_reference(spec, grid)),
+                               atol=1e-4, rtol=1e-4)
+
+
+@SET
+@given(st.data())
+def test_chunked_attention_matches_reference(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    S = data.draw(st.sampled_from([17, 33, 64, 100]))
+    hq = data.draw(st.sampled_from([2, 4]))
+    hkv = data.draw(st.sampled_from([1, 2]))
+    window = data.draw(st.sampled_from([None, 16]))
+    chunk = data.draw(st.sampled_from([8, 32, 128]))
+    q = jnp.asarray(rng.standard_normal((2, hq, S, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, hkv, S, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, hkv, S, 16)), jnp.float32)
+    got = chunked_attention(q, k, v, causal=True, window=window, chunk=chunk)
+    want = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3)
+
+
+@SET
+@given(st.data())
+def test_wkv_chunked_matches_sequential(data):
+    from repro.models.rwkv6 import rwkv_scan_ref, wkv_chunked
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    T = data.draw(st.integers(3, 90))
+    chunk = data.draw(st.sampled_from([4, 16, 64]))
+    wmag = data.draw(st.floats(0.01, 1.0))
+    B, nh, hd = 1, 2, 8
+    r, k, v = (jnp.asarray(rng.standard_normal((B, T, nh, hd)), jnp.float32)
+               for _ in range(3))
+    w = jnp.maximum(-jnp.abs(jnp.asarray(
+        rng.standard_normal((B, T, nh, hd)), jnp.float32)) * wmag, -1.0)
+    u = jnp.asarray(rng.standard_normal((nh, hd)), jnp.float32) * 0.1
+    y1, s1 = wkv_chunked(r, k, v, w, u, chunk=chunk)
+    y2, s2 = rwkv_scan_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-3,
+                               rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-3,
+                               rtol=2e-3)
+
+
+@SET
+@given(st.data())
+def test_ssd_chunked_matches_sequential(data):
+    from repro.models.mamba2 import mamba_scan_ref, ssd_chunked
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    T = data.draw(st.integers(3, 90))
+    chunk = data.draw(st.sampled_from([4, 16, 64]))
+    B, nh, hd, ns = 1, 2, 8, 4
+    xh = jnp.asarray(rng.standard_normal((B, T, nh, hd)), jnp.float32)
+    a = -jnp.abs(jnp.asarray(rng.standard_normal((B, T, nh)), jnp.float32))
+    Bv = jnp.asarray(rng.standard_normal((B, T, ns)), jnp.float32)
+    Cv = jnp.asarray(rng.standard_normal((B, T, ns)), jnp.float32)
+    y1, h1 = ssd_chunked(xh, a, Bv, Cv, chunk=chunk)
+    y2, h2 = mamba_scan_ref(xh, a, Bv, Cv)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-3,
+                               rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-3,
+                               rtol=2e-3)
