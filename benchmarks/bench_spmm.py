@@ -11,8 +11,22 @@ Three variants, mirroring the paper's axes:
 The paper's matrices are SuiteSparse; offline stand-ins sweep the same
 structure axes (uniform / banded / power-law). FoMs: useful GFLOP/s,
 +/-SU speedup (paper: 4.6x), utilization vs dense peak (paper: 42%).
+Run modes (``python benchmarks/bench_spmm.py [--shard] [--batched]``):
+* default     -- single-device variants below.
+* ``--shard``   -- the sharded engine (repro.kernels.engine) on a 1-D mesh
+  of virtual CPU devices (or real devices when present): N-partitioned
+  SpMM + column-partitioned SpMSpM, vs. their single-device twins.
+* ``--batched`` -- BatchedBCSR x dense through the vmapped kernel vs. a
+  python loop over per-matrix calls (the dispatch-overhead contrast).
 """
 from __future__ import annotations
+
+import sys
+
+if __name__ == "__main__" and "--shard" in sys.argv:
+    # Must precede the first jax backend touch: fake a 4-device host.
+    from repro.kernels.engine import ensure_virtual_devices
+    ensure_virtual_devices(4)
 
 import jax
 import jax.numpy as jnp
@@ -74,6 +88,82 @@ def _dense(a, b):
     return a @ b
 
 
+def run_sharded() -> list:
+    """--shard: the sharded engine end-to-end on an n-device mesh."""
+    from repro.core.formats import batched_bcsr_from_dense
+    from repro.kernels import engine
+
+    rng = np.random.default_rng(0)
+    rows = []
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    # Interpret-mode kernels pay a large per-grid-step emulation cost on
+    # CPU, so the sharded demo runs reduced shapes; relative numbers (and
+    # the end-to-end engine path) are what this mode exercises.
+    Ms, Ks, Ns = 256, 256, 512
+    b = jnp.asarray(rng.standard_normal((Ks, Ns)), jnp.float32)
+
+    shard_cases = [
+        ("blockuniform_5pct", _block_uniform(rng, (Ms, Ks), 0.05)),
+        ("banded_bw16", banded_sparse(rng, (Ms, Ks), 16)),
+    ]
+    for name, a_dense in shard_cases:
+        a = bcsr_from_dense(a_dense, (8, 8))
+        t_one = time_fn(lambda: spmm_ops.spmm(a, b, bn=128, interpret=True))
+        t_shard = time_fn(lambda: engine.shard_spmm(a, b, mesh=mesh))
+        useful = spmm_ops.flops(a, Ns)
+        rows.append(row(
+            f"spmm/{name}/sharded_x{n_dev}", t_shard * 1e6,
+            f"useful_gflops={useful / t_shard / 1e9:.2f};"
+            f"speedup_vs_1dev={t_one / t_shard:.2f}x;devices={n_dev}"))
+
+    # Batched MoE-style dispatch: 8 expert matrices, one token block.
+    stack = np.stack([_block_uniform(rng, (256, 256), 0.05)
+                      for _ in range(8)])
+    ab = batched_bcsr_from_dense(stack, (8, 8))
+    db = jnp.asarray(rng.standard_normal((8, 256, 256)), jnp.float32)
+    t_b = time_fn(lambda: engine.shard_spmm_batched(ab, db, mesh=mesh))
+    rows.append(row(f"spmm/batched8_sharded_x{n_dev}", t_b * 1e6,
+                    f"useful_flops={spmm_ops.flops(ab, 256)};"
+                    f"block_density={ab.density():.3f}"))
+
+    # Sharded SpMSpM (column-partitioned B streams).
+    from repro.kernels.spmspm import ops as spmspm_ops
+    left = random_dense_sparse(rng, (64, 512), 0.1)
+    right = random_dense_sparse(rng, (512, 64), 0.01)
+    ak, av = spmspm_ops.dense_to_ell_rows(left)
+    bk, bv = spmspm_ops.dense_to_ell_cols(right)
+    t_ss = time_fn(lambda: engine.shard_spmspm(ak, av, bk, bv, mesh=mesh))
+    rows.append(row(f"spmspm/sharded_x{n_dev}", t_ss * 1e6,
+                    f"devices={n_dev}"))
+    return rows
+
+
+def run_batched() -> list:
+    """--batched: vmapped batched kernel vs. a python loop of single calls."""
+    from repro.core.formats import batched_bcsr_from_dense
+
+    rng = np.random.default_rng(0)
+    rows = []
+    B = 8
+    stack = np.stack([_block_uniform(rng, (256, 256), 0.05)
+                      for _ in range(B)])
+    a = batched_bcsr_from_dense(stack, (8, 8))
+    d = jnp.asarray(rng.standard_normal((B, 256, 128)), jnp.float32)
+    t_batched = time_fn(lambda: spmm_ops.spmm_batched(a, d, interpret=True))
+
+    def looped():
+        return [spmm_ops.spmm(a[i], d[i], interpret=True) for i in range(B)]
+
+    t_loop = time_fn(looped)
+    useful = spmm_ops.flops(a, 128)
+    rows.append(row(f"spmm/batched{B}_vmap", t_batched * 1e6,
+                    f"useful_flops={useful};"
+                    f"speedup_vs_loop={t_loop / t_batched:.2f}x"))
+    rows.append(row(f"spmm/batched{B}_loop", t_loop * 1e6, ""))
+    return rows
+
+
 def run() -> list:
     rng = np.random.default_rng(0)
     rows = []
@@ -102,4 +192,9 @@ def run() -> list:
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    if "--shard" in sys.argv:
+        print("\n".join(run_sharded()))
+    elif "--batched" in sys.argv:
+        print("\n".join(run_batched()))
+    else:
+        print("\n".join(run()))

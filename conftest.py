@@ -1,0 +1,55 @@
+"""Repo-wide pytest configuration.
+
+Two jobs, both of which must happen before any test module imports jax:
+
+1. Force a multi-device CPU topology (4 virtual devices) so the sharded
+   sparse-engine tests exercise real ``shard_map`` partitioning on a plain
+   CPU host.  Harmless for single-device tests: jit still places
+   un-sharded computations on device 0.
+2. Tier the suite: ``slow`` (integration / model-smoke) tests are
+   deselected by default so the tier-1 gate (``pytest -x -q``) finishes in
+   minutes; run them with ``--run-slow`` (or select explicitly with ``-m``).
+   ``tpu`` tests are skipped unless a TPU backend is attached.
+"""
+import os
+
+# Must precede the first jax backend initialization (which happens at test
+# collection time via module-level PRNGKey calls in some test files).
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4"
+    ).strip()
+
+import pytest  # noqa: E402
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--run-slow", action="store_true", default=False,
+        help="run tests marked slow (integration / model smoke)")
+
+
+def pytest_collection_modifyitems(config, items):
+    import jax
+
+    if jax.default_backend() != "tpu":
+        skip_tpu = pytest.mark.skip(reason="requires a TPU backend")
+        for item in items:
+            if "tpu" in item.keywords:
+                item.add_marker(skip_tpu)
+
+    # Explicit opt-ins override the default deselection: --run-slow, a -m
+    # marker expression, or directly naming a file / node id on the CLI
+    # (`pytest tests/test_models_smoke.py::test_x` should run that test,
+    # not report a green 0-test run).
+    named_explicitly = any(
+        arg.endswith(".py") or "::" in arg for arg in config.args)
+    if (config.getoption("--run-slow") or config.getoption("-m")
+            or named_explicitly):
+        return
+    selected = [i for i in items if "slow" not in i.keywords]
+    deselected = [i for i in items if "slow" in i.keywords]
+    if deselected:
+        config.hook.pytest_deselected(items=deselected)
+        items[:] = selected

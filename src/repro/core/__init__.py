@@ -1,7 +1,8 @@
 """Core: the paper's contribution (streams, SU ops, sparse formats, stencils,
 multi-precision) as a composable JAX library."""
-from repro.core.formats import (BCSR, CSR, INVALID_KEY, SortedCOO,
-                                banded_sparse, bcsr_from_dense, coo_from_dense,
+from repro.core.formats import (BCSR, CSR, INVALID_KEY, BatchedBCSR, SortedCOO,
+                                banded_sparse, batched_bcsr_from_dense,
+                                bcsr_from_dense, coo_from_dense,
                                 csr_from_dense, powerlaw_sparse,
                                 random_dense_sparse)
 from repro.core.precision import LADDER, PrecisionPolicy, policy
@@ -11,8 +12,9 @@ from repro.core.su import (indirect_gather, indirect_scatter_add, intersect,
                            intersect_dot, topk_sparsify, union_add)
 
 __all__ = [
-    "BCSR", "CSR", "SortedCOO", "INVALID_KEY",
-    "banded_sparse", "bcsr_from_dense", "coo_from_dense", "csr_from_dense",
+    "BCSR", "BatchedBCSR", "CSR", "SortedCOO", "INVALID_KEY",
+    "banded_sparse", "batched_bcsr_from_dense", "bcsr_from_dense",
+    "coo_from_dense", "csr_from_dense",
     "powerlaw_sparse", "random_dense_sparse",
     "LADDER", "PrecisionPolicy", "policy",
     "STENCILS", "StencilSpec", "apply_reference",

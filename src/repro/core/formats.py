@@ -106,6 +106,58 @@ class BCSR:
         return self.nnzb / float(gm * gn)
 
 
+@_pytree_dataclass(static=("shape", "block"))
+class BatchedBCSR:
+    """A batch of BCSR matrices sharing ONE index stream.
+
+    Occamy replicates the index stream across clusters while each cluster's
+    SPM holds different data tiles; the batched container mirrors that:
+    ``indptr``/``block_rows``/``block_cols`` describe the union sparsity
+    pattern once, and ``blocks`` carries per-batch values ``(B, nnzb, bm,
+    bn)``.  Matrices whose pattern is a subset of the union simply hold zero
+    blocks at the extra positions -- same math, static shapes, and the whole
+    container is ``vmap``-compatible over the leading blocks axis (the index
+    arrays broadcast).  MoE-style workloads (one sparse dispatch per expert)
+    batch through here.
+    """
+
+    indptr: jax.Array      # (n_brows + 1,) int32 -- shared across the batch
+    block_rows: jax.Array  # (nnzb,) int32 -- shared
+    block_cols: jax.Array  # (nnzb,) int32 -- shared
+    blocks: jax.Array      # (B, nnzb, bm, bn) float
+    shape: Tuple[int, int, int]   # (B, M, K)
+    block: Tuple[int, int]
+
+    @property
+    def batch(self) -> int:
+        return self.blocks.shape[0]
+
+    @property
+    def nnzb(self) -> int:
+        return self.blocks.shape[1]
+
+    @property
+    def grid_shape(self) -> Tuple[int, int]:
+        return (self.shape[1] // self.block[0], self.shape[2] // self.block[1])
+
+    def __getitem__(self, i: int) -> "BCSR":
+        """Static (python-int) batch element as a plain BCSR view."""
+        return BCSR(indptr=self.indptr, block_rows=self.block_rows,
+                    block_cols=self.block_cols, blocks=self.blocks[i],
+                    shape=self.shape[1:], block=self.block)
+
+    def todense(self) -> jax.Array:
+        bm, bn = self.block
+        gm, gn = self.grid_shape
+        dense = jnp.zeros((self.batch, gm, gn, bm, bn), self.blocks.dtype)
+        dense = dense.at[:, self.block_rows, self.block_cols].add(self.blocks)
+        return dense.transpose(0, 1, 3, 2, 4).reshape(self.shape)
+
+    def density(self) -> float:
+        gm, gn = self.grid_shape
+        return self.nnzb / float(gm * gn)
+
+
 @_pytree_dataclass(static=("shape",))
 class SortedCOO:
     """Sorted coordinate stream: the SU *intersection/union* operand format.
@@ -172,6 +224,36 @@ def bcsr_from_dense(dense: np.ndarray, block: Tuple[int, int]) -> BCSR:
         block_cols=jnp.asarray(bcols.astype(np.int32)),
         blocks=jnp.asarray(tiles[brows, bcols]),
         shape=(m, n),
+        block=block,
+    )
+
+
+def batched_bcsr_from_dense(dense: np.ndarray, block: Tuple[int, int]
+                            ) -> BatchedBCSR:
+    """(B, M, K) dense stack -> BatchedBCSR over the *union* block pattern.
+
+    The shared index stream is the union of the per-matrix nonzero-block
+    masks, so one scalar-prefetch stream drives all batch elements (the
+    replicated-index-stream contract).  Per-element blocks that are zero in
+    a given matrix are stored as zero tiles.
+    """
+    dense = np.asarray(dense)
+    assert dense.ndim == 3, dense.shape
+    B, m, n = dense.shape
+    bm, bn = block
+    assert m % bm == 0 and n % bn == 0, f"shape {dense.shape} not divisible by block {block}"
+    gm, gn = m // bm, n // bn
+    tiles = dense.reshape(B, gm, bm, gn, bn).transpose(0, 1, 3, 2, 4)
+    nz = (np.abs(tiles).sum(axis=(3, 4)) != 0).any(axis=0)   # (gm, gn) union
+    brows, bcols = np.nonzero(nz)
+    indptr = np.zeros(gm + 1, np.int32)
+    np.cumsum(nz.sum(axis=1), out=indptr[1:])
+    return BatchedBCSR(
+        indptr=jnp.asarray(indptr),
+        block_rows=jnp.asarray(brows.astype(np.int32)),
+        block_cols=jnp.asarray(bcols.astype(np.int32)),
+        blocks=jnp.asarray(tiles[:, brows, bcols]),
+        shape=(B, m, n),
         block=block,
     )
 

@@ -1,0 +1,214 @@
+"""Sharded + batched sparse execution engine: the "48 clusters" layer.
+
+Occamy scales a single compute cluster to 48 by replicating it behind two
+HBM stacks and a D2D link; each cluster sees the *same* index stream but a
+different slice of the dense data.  The JAX translation is ``shard_map``
+over a device mesh:
+
+  * **SpMM**   -- the BCSR index stream + blocks are replicated to every
+    device (the paper's per-cluster index-stream copy), the dense operand is
+    partitioned along its N columns (each chiplet's HBM holds its slice),
+    and every device runs the *same* Pallas kernel on its slice.  The
+    result is N-partitioned; materializing it is the all-gather.
+  * **Batched SpMM** -- a :class:`~repro.core.formats.BatchedBCSR` batch is
+    partitioned along the batch dim (whole problems per device, MoE-style),
+    with the shared index stream again replicated.
+  * **SpMSpM** -- A's row streams are replicated, B's column streams are
+    partitioned, so each device owns a column stripe of the output.
+
+Because each device executes the identical kernel on the identical operand
+values for its output tiles, sharded fp32 results are **bit-for-bit** equal
+to the single-device kernel (verified in tests/test_sparse_engine.py).
+
+Mesh resolution: explicit ``mesh=`` arg > ``repro.parallel.context.MESH``
+(set by the step builders) > an automatic 1-D ("data",) mesh over all local
+devices.  On CPU the kernels run in interpret mode automatically.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.formats import BCSR, INVALID_KEY, BatchedBCSR
+from repro.parallel.sharding import compat_shard_map
+from repro.kernels import tuning
+from repro.kernels.spmm import ops as spmm_ops
+from repro.kernels.spmm.kernel import spmm_bcsr
+from repro.kernels.spmspm.kernel import spmspm_ell
+
+
+def ensure_virtual_devices(n: int = 4) -> None:
+    """Force >= ``n`` virtual CPU devices (tests / CLI demos on one host).
+
+    Must run before the first jax backend touch; a no-op if XLA_FLAGS
+    already forces a count or a real multi-device backend exists."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip())
+
+
+def _interpret_default(interpret: Optional[bool]) -> bool:
+    return (not tuning.on_tpu()) if interpret is None else interpret
+
+
+def auto_mesh(mesh: Optional[Mesh] = None) -> Tuple[Mesh, str]:
+    """Resolve (mesh, shard-axis): arg > parallel-context mesh > all devices."""
+    if mesh is None:
+        from repro.parallel import context as pctx
+        mesh = pctx.MESH
+    if mesh is None:
+        devs = jax.devices()
+        mesh = jax.make_mesh((len(devs),), ("data",))
+    axis = "data" if "data" in mesh.axis_names else mesh.axis_names[0]
+    return mesh, axis
+
+
+def _pad_dim(x: jax.Array, dim: int, multiple: int, value=0) -> jax.Array:
+    pad = (-x.shape[dim]) % multiple
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[dim] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# SpMM: N-column partitioning (replicated index stream, sliced dense HBM).
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _sharded_spmm_fn(mesh: Mesh, axis: str, gm: int, bn: int, out_dtype: str,
+                     interpret: bool):
+    kern = functools.partial(spmm_bcsr, n_block_rows=gm, bn=bn,
+                             out_dtype=jnp.dtype(out_dtype), interpret=interpret)
+    return jax.jit(compat_shard_map(
+        lambda rows, cols, blocks, dense: kern(rows, cols, blocks, dense),
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(None, axis)),
+        out_specs=P(None, axis),
+        check=False,  # pallas_call has no replication/vma rule
+    ))
+
+
+def shard_spmm(a: BCSR, dense: jax.Array, *, mesh: Optional[Mesh] = None,
+               bn: Optional[int] = None, out_dtype=jnp.float32,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """C = A @ dense with dense's N-tiles partitioned across the mesh.
+
+    Handles uneven splits: N is zero-padded up to ``n_dev * bn`` granularity
+    and the pad is stripped after the gather, so any N works on any mesh."""
+    mesh, axis = auto_mesh(mesh)
+    n_dev = mesh.shape[axis]
+    interpret = _interpret_default(interpret)
+    a = spmm_ops.pad_empty_rows(a)
+    K, N = dense.shape
+    assert K == a.shape[1], (a.shape, dense.shape)
+    bn = spmm_ops._resolve_bn(bn, max(1, N // n_dev), dense.dtype, a.block[1])
+    dense = _pad_dim(dense, 1, n_dev * bn)
+    gm, _ = a.grid_shape
+    fn = _sharded_spmm_fn(mesh, axis, gm, bn, jnp.dtype(out_dtype).name,
+                          interpret)
+    out = fn(a.block_rows, a.block_cols, a.blocks, dense)
+    return out[:, :N]
+
+
+# ---------------------------------------------------------------------------
+# Batched SpMM: batch partitioning (whole problems per device, MoE-style).
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _sharded_spmm_batched_fn(mesh: Mesh, axis: str, gm: int, bn: int,
+                             out_dtype: str, interpret: bool):
+    kern = functools.partial(spmm_bcsr, n_block_rows=gm, bn=bn,
+                             out_dtype=jnp.dtype(out_dtype), interpret=interpret)
+
+    def local(rows, cols, blocks, dense):
+        # vmap over this device's slice of the batch; index stream shared.
+        return jax.vmap(lambda bl, d: kern(rows, cols, bl, d))(blocks, dense)
+
+    return jax.jit(compat_shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(), P(axis), P(axis)),
+        out_specs=P(axis),
+        check=False,
+    ))
+
+
+def shard_spmm_batched(a: BatchedBCSR, dense: jax.Array, *,
+                       mesh: Optional[Mesh] = None, bn: Optional[int] = None,
+                       out_dtype=jnp.float32,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """C[b] = A[b] @ dense[b], batch dim partitioned across the mesh.
+
+    ``dense``: (B, K, N) or (K, N) broadcast. The batch is zero-padded up to
+    a device multiple (zero blocks x zero dense = zero work rows) and the
+    pad stripped after."""
+    mesh, axis = auto_mesh(mesh)
+    n_dev = mesh.shape[axis]
+    interpret = _interpret_default(interpret)
+    a = spmm_ops.pad_empty_rows(a)
+    B = a.batch
+    if dense.ndim == 2:
+        dense = jnp.broadcast_to(dense, (B,) + dense.shape)
+    assert dense.shape[0] == B and dense.shape[1] == a.shape[2], (
+        a.shape, dense.shape)
+    N = dense.shape[2]
+    bn = spmm_ops._resolve_bn(bn, N, dense.dtype, a.block[1])
+    dense = _pad_dim(_pad_dim(dense, 2, bn), 0, n_dev)
+    blocks = _pad_dim(a.blocks, 0, n_dev)
+    gm, _ = a.grid_shape
+    fn = _sharded_spmm_batched_fn(mesh, axis, gm, bn,
+                                  jnp.dtype(out_dtype).name, interpret)
+    out = fn(a.block_rows, a.block_cols, blocks, dense)
+    return out[:B, :, :N]
+
+
+# ---------------------------------------------------------------------------
+# SpMSpM: B-column-stream partitioning (each device owns an output stripe).
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _sharded_spmspm_fn(mesh: Mesh, axis: str, rt: int, ct: int,
+                       out_dtype: str, interpret: bool):
+    kern = functools.partial(spmspm_ell, rt=rt, ct=ct,
+                             out_dtype=jnp.dtype(out_dtype), interpret=interpret)
+    return jax.jit(compat_shard_map(
+        lambda ak, av, bk, bv: kern(ak, av, bk, bv),
+        mesh=mesh,
+        in_specs=(P(), P(), P(axis, None), P(axis, None)),
+        out_specs=P(None, axis),
+        check=False,
+    ))
+
+
+def shard_spmspm(a_keys, a_vals, b_keys, b_vals, *,
+                 mesh: Optional[Mesh] = None, rt: Optional[int] = None,
+                 ct: Optional[int] = None, out_dtype=jnp.float32,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Sharded sorted-stream intersection: A's row streams replicated, B's
+    column streams partitioned; device d computes output columns of its B
+    stripe.  R is padded to ``rt`` and C to ``n_dev * ct`` (INVALID keys,
+    zero values -- they can never match) and both pads are stripped."""
+    mesh, axis = auto_mesh(mesh)
+    n_dev = mesh.shape[axis]
+    interpret = _interpret_default(interpret)
+    ak, av = jnp.asarray(a_keys), jnp.asarray(a_vals)
+    bk, bv = jnp.asarray(b_keys), jnp.asarray(b_vals)
+    R, C = ak.shape[0], bk.shape[0]
+    if rt is None or ct is None:
+        trt, tct = tuning.spmspm_tiles(R, max(1, C // n_dev), ak.shape[1],
+                                       bk.shape[1], av.dtype)
+        rt, ct = rt or trt, ct or tct
+    ak = _pad_dim(ak, 0, rt, value=INVALID_KEY)
+    av = _pad_dim(av, 0, rt)
+    bk = _pad_dim(bk, 0, n_dev * ct, value=INVALID_KEY)
+    bv = _pad_dim(bv, 0, n_dev * ct)
+    fn = _sharded_spmspm_fn(mesh, axis, rt, ct, jnp.dtype(out_dtype).name,
+                            interpret)
+    return fn(ak, av, bk, bv)[:R, :C]

@@ -1,4 +1,15 @@
-"""Public SpMM API: BCSR container in, padded/normalized kernel call out."""
+"""Public SpMM API: BCSR container in, padded/normalized kernel call out.
+
+Two entry points:
+  * :func:`spmm`         -- single (M, K) BCSR x (K, N) dense.
+  * :func:`spmm_batched` -- BatchedBCSR (shared index stream, per-batch
+    blocks) x (B, K, N) [or a broadcast (K, N)] dense, via ``vmap`` of the
+    same Pallas kernel; the index stream is replicated across the batch
+    exactly like Occamy replicates it across clusters.
+
+Tile selection defaults to the autotune table in ``repro.kernels.tuning``
+(pass ``bn=`` explicitly to override).
+"""
 from __future__ import annotations
 
 import functools
@@ -7,35 +18,45 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import BCSR
+from repro.core.formats import BCSR, BatchedBCSR
+from repro.kernels import tuning
 from repro.kernels.spmm.kernel import spmm_bcsr
 
 
-def pad_empty_rows(a: BCSR) -> BCSR:
+def pad_empty_rows(a: BCSR | BatchedBCSR):
     """Ensure every block-row appears in the stream (kernel requirement:
     unvisited output tiles are undefined). Adds one zero block at col 0 for
-    each empty row; stream stays (row, col)-sorted. Host-side (numpy)."""
-    gm, _ = a.grid_shape
+    each empty row; stream stays (row, col)-sorted. Host-side (numpy).
+
+    Works for both the single and the batched container (the batched one
+    shares a single index stream, so the same rows are padded for every
+    batch element)."""
+    gm = a.grid_shape[0]
     rows = np.asarray(a.block_rows)
-    cols = np.asarray(a.block_cols)
-    blocks = np.asarray(a.blocks)
     present = np.zeros(gm, bool)
     present[rows] = True
     missing = np.nonzero(~present)[0].astype(np.int32)
     if missing.size == 0:
-        return a
+        return a  # common case: no D2H transfer of the block values
+    cols = np.asarray(a.block_cols)
+    blocks = np.asarray(a.blocks)
     bm, bk = a.block
     rows = np.concatenate([rows, missing])
     cols = np.concatenate([cols, np.zeros_like(missing)])
-    blocks = np.concatenate([blocks, np.zeros((missing.size, bm, bk), blocks.dtype)])
+    zshape = ((missing.size, bm, bk) if isinstance(a, BCSR)
+              else (blocks.shape[0], missing.size, bm, bk))
+    blocks = np.concatenate([blocks, np.zeros(zshape, blocks.dtype)],
+                            axis=0 if isinstance(a, BCSR) else 1)
     order = np.lexsort((cols, rows))
     indptr = np.zeros(gm + 1, np.int32)
     np.cumsum(np.bincount(rows, minlength=gm), out=indptr[1:])
-    return BCSR(indptr=jnp.asarray(indptr),
-                block_rows=jnp.asarray(rows[order]),
-                block_cols=jnp.asarray(cols[order]),
-                blocks=jnp.asarray(blocks[order]),
-                shape=a.shape, block=a.block)
+    kw = dict(indptr=jnp.asarray(indptr),
+              block_rows=jnp.asarray(rows[order]),
+              block_cols=jnp.asarray(cols[order]),
+              shape=a.shape, block=a.block)
+    if isinstance(a, BCSR):
+        return BCSR(blocks=jnp.asarray(blocks[order]), **kw)
+    return BatchedBCSR(blocks=jnp.asarray(blocks[:, order]), **kw)
 
 
 @functools.partial(jax.jit, static_argnames=("n_block_rows", "bn", "out_dtype", "interpret"))
@@ -46,13 +67,29 @@ def _spmm_jit(block_rows, block_cols, blocks, dense, *, n_block_rows, bn,
                      interpret=interpret)
 
 
-def spmm(a: BCSR, dense: jax.Array, *, bn: int = 128, out_dtype=jnp.float32,
-         interpret: bool = False) -> jax.Array:
-    """C = A @ dense. Pads N to a multiple of ``bn`` and strips it after."""
+@functools.partial(jax.jit, static_argnames=("n_block_rows", "bn", "out_dtype", "interpret"))
+def _spmm_batched_jit(block_rows, block_cols, blocks, dense, *, n_block_rows,
+                      bn, out_dtype, interpret):
+    f = functools.partial(spmm_bcsr, n_block_rows=n_block_rows, bn=bn,
+                          out_dtype=out_dtype, interpret=interpret)
+    return jax.vmap(lambda bl, d: f(block_rows, block_cols, bl, d))(blocks, dense)
+
+
+def _resolve_bn(bn, n, dtype, bk) -> int:
+    if bn is not None:
+        return min(bn, max(128, n))
+    return tuning.spmm_bn(n, dtype, bk=bk)
+
+
+def spmm(a: BCSR, dense: jax.Array, *, bn: int | None = None,
+         out_dtype=jnp.float32, interpret: bool = False) -> jax.Array:
+    """C = A @ dense. Pads N to a multiple of ``bn`` and strips it after.
+
+    ``bn=None`` (default) consults the autotune table for the dtype/shape."""
     a = pad_empty_rows(a)
     K, N = dense.shape
     assert K == a.shape[1], (a.shape, dense.shape)
-    bn = min(bn, max(128, N))
+    bn = _resolve_bn(bn, N, dense.dtype, a.block[1])
     n_pad = (-N) % bn
     if n_pad:
         dense = jnp.pad(dense, ((0, 0), (0, n_pad)))
@@ -63,7 +100,39 @@ def spmm(a: BCSR, dense: jax.Array, *, bn: int = 128, out_dtype=jnp.float32,
     return out[:, :N] if n_pad else out
 
 
-def flops(a: BCSR, n: int) -> int:
-    """Useful FLOPs: 2 * nnz_elements * N (paper counts nonzero FMAs)."""
+def spmm_batched(a: BatchedBCSR, dense: jax.Array, *, bn: int | None = None,
+                 out_dtype=jnp.float32, interpret: bool = False) -> jax.Array:
+    """C[b] = A[b] @ dense[b] for a shared-index-stream batch.
+
+    ``dense`` is (B, K, N), or (K, N) to broadcast one dense operand across
+    the batch (the MoE dispatch case: many sparse routings of one token
+    block). Returns (B, M, N)."""
+    a = pad_empty_rows(a)
+    B = a.batch
+    if dense.ndim == 2:
+        dense = jnp.broadcast_to(dense, (B,) + dense.shape)
+    assert dense.shape[0] == B and dense.shape[1] == a.shape[2], (
+        a.shape, dense.shape)
+    N = dense.shape[2]
+    bn = _resolve_bn(bn, N, dense.dtype, a.block[1])
+    n_pad = (-N) % bn
+    if n_pad:
+        dense = jnp.pad(dense, ((0, 0), (0, 0), (0, n_pad)))
+    gm, _ = a.grid_shape
+    out = _spmm_batched_jit(a.block_rows, a.block_cols, a.blocks, dense,
+                            n_block_rows=gm, bn=bn, out_dtype=out_dtype,
+                            interpret=interpret)
+    return out[..., :N] if n_pad else out
+
+
+def flops(a: BCSR | BatchedBCSR, n: int) -> int:
+    """Useful FLOPs: 2 * nnz_elements * N (paper counts nonzero FMAs).
+
+    For a BatchedBCSR, union-pattern positions holding an all-zero tile in a
+    given batch element are *stream* work but not useful FLOPs, so they are
+    excluded (per-element nonzero-block count, not B * nnzb_union)."""
     bm, bk = a.block
+    if isinstance(a, BatchedBCSR):
+        nz_blocks = int(jnp.any(a.blocks != 0, axis=(2, 3)).sum())
+        return 2 * nz_blocks * bm * bk * n
     return 2 * int(a.nnzb) * bm * bk * n

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.formats import INVALID_KEY
+from repro.kernels import tuning
 from repro.kernels.spmspm.kernel import spmspm_ell
 
 
@@ -39,12 +40,18 @@ def _spmspm_jit(ak, av, bk, bv, *, rt, ct, interpret):
     return spmspm_ell(ak, av, bk, bv, rt=rt, ct=ct, interpret=interpret)
 
 
-def spmspm(a_keys, a_vals, b_keys, b_vals, *, rt: int = 8, ct: int = 8,
-           interpret: bool = False) -> jax.Array:
-    """Dense-result SpMSpM over padded-ELL streams; pads R/C to tiles."""
+def spmspm(a_keys, a_vals, b_keys, b_vals, *, rt: int | None = None,
+           ct: int | None = None, interpret: bool = False) -> jax.Array:
+    """Dense-result SpMSpM over padded-ELL streams; pads R/C to tiles.
+
+    ``rt``/``ct`` default to the autotune table (repro.kernels.tuning)."""
     ak, av = jnp.asarray(a_keys), jnp.asarray(a_vals)
     bk, bv = jnp.asarray(b_keys), jnp.asarray(b_vals)
     R, C = ak.shape[0], bk.shape[0]
+    if rt is None or ct is None:
+        trt, tct = tuning.spmspm_tiles(R, C, ak.shape[1], bk.shape[1],
+                                       av.dtype)
+        rt, ct = rt or trt, ct or tct
     rp, cp = (-R) % rt, (-C) % ct
     if rp:
         ak = jnp.pad(ak, ((0, rp), (0, 0)), constant_values=INVALID_KEY)

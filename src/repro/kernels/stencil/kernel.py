@@ -3,7 +3,7 @@
 The SU mechanism being reproduced: Occamy programs two affine streams (grid
 reads, result writes) so the FPU executes one FMA per tap per cycle with zero
 address arithmetic. Here the Pallas grid pipeline streams overlapping
-(tile + 2*halo) VMEM blocks (``pl.Element`` indexing) while the unrolled
+(tile + 2*halo) VMEM blocks (element-offset ``pl.unblocked`` indexing) while the unrolled
 shifted-slice FMA chain inside the kernel is the exact analogue of Fig. 5's
 "continuous FMA execution". Double-buffering of HBM->VMEM tiles is Pallas'
 automatic pipelining -- Occamy's DMA-core double buffering.
@@ -19,6 +19,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.stencils import StencilSpec
+
+
+def _overlap_spec(elem_shape, index_map):
+    """Element-offset (overlapping halo window) BlockSpec across jax
+    versions: ``pl.Element`` on newer jax, ``indexing_mode=pl.unblocked``
+    on 0.4.x (same semantics -- index_map returns element offsets)."""
+    if hasattr(pl, "Element"):
+        return pl.BlockSpec(tuple(pl.Element(s) for s in elem_shape), index_map)
+    return pl.BlockSpec(elem_shape, index_map, indexing_mode=pl.unblocked)
 
 
 def _stencil_kernel_2d(x_ref, o_ref, *, spec: StencilSpec, th: int, tw: int):
@@ -62,8 +71,8 @@ def stencil_2d(grid_in: jax.Array, spec: StencilSpec, *, tile=(64, 128),
     return pl.pallas_call(
         kern,
         grid=(H // th, W // tw),
-        in_specs=[pl.BlockSpec(
-            (pl.Element(th + 2 * r), pl.Element(tw + 2 * r)),
+        in_specs=[_overlap_spec(
+            (th + 2 * r, tw + 2 * r),
             lambda i, j: (i * th, j * tw),
         )],
         out_specs=pl.BlockSpec((th, tw), lambda i, j: (i, j)),
@@ -85,8 +94,8 @@ def stencil_3d(grid_in: jax.Array, spec: StencilSpec, *, tile=(8, 16, 128),
     return pl.pallas_call(
         kern,
         grid=(Z // tz, Y // ty, X // tx),
-        in_specs=[pl.BlockSpec(
-            (pl.Element(tz + 2 * r), pl.Element(ty + 2 * r), pl.Element(tx + 2 * r)),
+        in_specs=[_overlap_spec(
+            (tz + 2 * r, ty + 2 * r, tx + 2 * r),
             lambda i, j, k: (i * tz, j * ty, k * tx),
         )],
         out_specs=pl.BlockSpec((tz, ty, tx), lambda i, j, k: (i, j, k)),

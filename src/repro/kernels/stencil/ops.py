@@ -8,9 +8,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.stencils import StencilSpec
+from repro.kernels import tuning
 from repro.kernels.stencil.kernel import stencil_2d, stencil_3d
-
-_DEFAULT_TILES = {2: (64, 128), 3: (8, 16, 128)}
 
 
 def _padded_tiles(interior: Tuple[int, ...], tile: Tuple[int, ...]):
@@ -27,9 +26,10 @@ def apply(grid_in: jax.Array, spec: StencilSpec, *, tile: Tuple[int, ...] | None
     r = spec.radius
     ndim = spec.ndim
     assert grid_in.ndim == ndim
-    tile = tile or _DEFAULT_TILES[ndim]
-    # Shrink tiles that exceed the (already halo-less) interior.
     interior = tuple(s - 2 * r for s in grid_in.shape)
+    # Tile selection: explicit arg > autotune table (per dtype / platform).
+    tile = tile or tuning.stencil_tile(interior, grid_in.dtype)
+    # Shrink tiles that exceed the (already halo-less) interior.
     tile = tuple(min(t, -(-n // 8) * 8 if i < ndim - 1 else -(-n // 128) * 128)
                  for i, (t, n) in enumerate(zip(tile, interior)))
     padded = _padded_tiles(interior, tile)

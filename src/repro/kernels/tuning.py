@@ -1,0 +1,174 @@
+"""Tile-size autotune table for the sparse / stencil Pallas kernels.
+
+Occamy fixes its working-set geometry at silicon time (128 KiB TCDM per
+cluster, 8-lane FPU SIMD); the TPU analogue is choosing Pallas block shapes
+so one (A-block, B-tile, accumulator) working set fits VMEM while the MXU/VPU
+tiles stay aligned to the native (8, 128) lane quantum.  This module replaces
+the hardcoded ``bn=128`` / ``rt=ct=8`` / stencil-tile defaults scattered
+through the ops layers with a single provenance-tracked table.
+
+Provenance: entries were selected by sweeping interpret-mode correctness on
+CPU and the roofline model in ``benchmarks/roofline.py`` for TPU shapes
+(VMEM budget ~16 MiB/core, MXU 128x128, VPU 8x128).  They are *static*
+heuristics, not on-device measurements -- re-measure when real TPU time is
+available and override via :func:`register`.
+
+Selection contract:
+  * ``lookup("spmm", ...)``    -> {"bn": int}
+  * ``lookup("spmspm", ...)``  -> {"rt": int, "ct": int}
+  * ``lookup("stencil", ...)`` -> {"tile": Tuple[int, ...]}
+
+On CPU (no TPU backend) every op falls back to the smallest aligned tile:
+interpret mode emulates the grid serially, so large tiles only add padding
+waste without any DMA-overlap benefit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Native lane quanta: second-minor x minor tile of the VPU / MXU.
+SUBLANE = 8
+LANE = 128
+# Per-core VMEM budget we allow one kernel working set to occupy (bytes).
+VMEM_BUDGET = 8 * 2**20
+
+
+@functools.lru_cache(maxsize=1)
+def on_tpu() -> bool:
+    """True when a real TPU backend is attached (tuning targets VMEM);
+    otherwise the CPU/interpret fallback row is used."""
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # backend init can fail in exotic harnesses
+        return False
+
+
+def _dtype_bytes(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# Table rows.  Key: (op, dtype-bucket, platform) -> params.  dtype-bucket is
+# the accumulating-input width ("f32" for >=4-byte, "bf16" for 2-byte,
+# "i8/fp8" for 1-byte); platform is "tpu" or "cpu".
+# ---------------------------------------------------------------------------
+
+def _bucket(dtype) -> str:
+    b = _dtype_bytes(dtype)
+    return "f32" if b >= 4 else ("bf16" if b == 2 else "fp8")
+
+
+_TABLE: Dict[Tuple[str, str, str], Dict[str, Any]] = {
+    # SpMM: bn is the dense-operand N-tile.  Wider tiles amortize the
+    # per-step index-stream scalar read; narrower dtypes double the lane
+    # capacity so the same VMEM footprint covers 2x/4x the columns.
+    ("spmm", "f32", "tpu"): {"bn": 256},
+    ("spmm", "bf16", "tpu"): {"bn": 512},
+    ("spmm", "fp8", "tpu"): {"bn": 512},
+    ("spmm", "f32", "cpu"): {"bn": 128},
+    ("spmm", "bf16", "cpu"): {"bn": 128},
+    ("spmm", "fp8", "cpu"): {"bn": 128},
+    # SpMSpM: (rt, ct) is the dense accumulator tile; the all-pairs compare
+    # issues rt*ct*Lb comparisons per step, so bigger tiles raise comparator
+    # occupancy until the (rt, la) + (ct, lb) streams blow VMEM.
+    ("spmspm", "f32", "tpu"): {"rt": 16, "ct": 16},
+    ("spmspm", "bf16", "tpu"): {"rt": 16, "ct": 32},
+    ("spmspm", "fp8", "tpu"): {"rt": 16, "ct": 32},
+    ("spmspm", "f32", "cpu"): {"rt": 8, "ct": 8},
+    ("spmspm", "bf16", "cpu"): {"rt": 8, "ct": 8},
+    ("spmspm", "fp8", "cpu"): {"rt": 8, "ct": 8},
+    # Stencil: per-ndim halo tiles; minor dim pinned to the 128 lane width.
+    ("stencil2d", "f32", "tpu"): {"tile": (256, 256)},
+    ("stencil2d", "bf16", "tpu"): {"tile": (256, 512)},
+    ("stencil2d", "fp8", "tpu"): {"tile": (256, 512)},
+    ("stencil2d", "f32", "cpu"): {"tile": (64, 128)},
+    ("stencil2d", "bf16", "cpu"): {"tile": (64, 128)},
+    ("stencil2d", "fp8", "cpu"): {"tile": (64, 128)},
+    ("stencil3d", "f32", "tpu"): {"tile": (8, 32, 256)},
+    ("stencil3d", "bf16", "tpu"): {"tile": (8, 32, 512)},
+    ("stencil3d", "fp8", "cpu"): {"tile": (8, 16, 128)},
+    ("stencil3d", "f32", "cpu"): {"tile": (8, 16, 128)},
+    ("stencil3d", "bf16", "cpu"): {"tile": (8, 16, 128)},
+    ("stencil3d", "fp8", "tpu"): {"tile": (8, 32, 512)},
+}
+
+
+def register(op: str, dtype, params: Dict[str, Any], *, platform: str | None = None):
+    """Override / extend a table row (e.g. from a measured on-device sweep)."""
+    plat = platform or ("tpu" if on_tpu() else "cpu")
+    _TABLE[(op, _bucket(dtype), plat)] = dict(params)
+
+
+def _row(op: str, dtype) -> Dict[str, Any]:
+    plat = "tpu" if on_tpu() else "cpu"
+    key = (op, _bucket(dtype), plat)
+    if key not in _TABLE:  # unknown bucket -> conservative f32/cpu row
+        key = (op, "f32", "cpu")
+    return dict(_TABLE[key])
+
+
+# ---------------------------------------------------------------------------
+# Per-op lookups (shape-aware clamping on top of the table row).
+# ---------------------------------------------------------------------------
+
+def spmm_bn(n: int, dtype=jnp.float32, *, bk: int = 8) -> int:
+    """N-tile for the BCSR SpMM kernel.
+
+    Clamps the table bn down to N rounded up to the lane width (a tile wider
+    than the whole operand is pure padding), and down again if the dense
+    K-tile + accumulator would exceed the VMEM budget.
+    """
+    bn = int(_row("spmm", dtype)["bn"])
+    n_aligned = -(-max(n, 1) // LANE) * LANE
+    bn = min(bn, max(LANE, n_aligned))
+    # working set: (bk, bn) dense tile + (8, bn) f32 accumulator, double-buffered
+    while bn > LANE and 2 * (bk * bn * _dtype_bytes(dtype) + SUBLANE * bn * 4) > VMEM_BUDGET:
+        bn //= 2
+    return bn
+
+
+def spmspm_tiles(r: int, c: int, la: int, lb: int, dtype=jnp.float32
+                 ) -> Tuple[int, int]:
+    """(rt, ct) accumulator tile for the all-pairs intersection kernel."""
+    row = _row("spmspm", dtype)
+    rt, ct = int(row["rt"]), int(row["ct"])
+    # Never tile wider than the (padded) problem.
+    rt = min(rt, -(-max(r, 1) // SUBLANE) * SUBLANE)
+    ct = min(ct, -(-max(c, 1) // SUBLANE) * SUBLANE)
+    # Stream working set: (rt, la) + (ct, lb) keys+vals, int32+f32.
+    while rt > SUBLANE and 8 * (rt * la + ct * lb) > VMEM_BUDGET:
+        rt = max(SUBLANE, rt // 2)
+        ct = max(SUBLANE, ct // 2)
+    return rt, ct
+
+
+def stencil_tile(interior: Tuple[int, ...], dtype=jnp.float32) -> Tuple[int, ...]:
+    """Halo-tile for the 2-D/3-D stencil kernels (minor dim lane-aligned)."""
+    ndim = len(interior)
+    tile = tuple(_row(f"stencil{ndim}d", dtype)["tile"])
+    # Clamp each dim to the interior rounded up to its alignment quantum
+    # (8 for majors, 128 for the minor) -- ops.apply re-clamps identically,
+    # so the table only ever *suggests*.
+    out = []
+    for i, (t, n) in enumerate(zip(tile, interior)):
+        q = LANE if i == ndim - 1 else SUBLANE
+        out.append(min(t, -(-max(n, 1) // q) * q))
+    return tuple(out)
+
+
+def lookup(op: str, *, dtype=jnp.float32, **shape) -> Dict[str, Any]:
+    """Generic front door used by benchmarks / diagnostics."""
+    if op == "spmm":
+        return {"bn": spmm_bn(shape.get("n", LANE), dtype,
+                              bk=shape.get("bk", SUBLANE))}
+    if op == "spmspm":
+        rt, ct = spmspm_tiles(shape.get("r", SUBLANE), shape.get("c", SUBLANE),
+                              shape.get("la", 1), shape.get("lb", 1), dtype)
+        return {"rt": rt, "ct": ct}
+    if op == "stencil":
+        return {"tile": stencil_tile(shape["interior"], dtype)}
+    raise KeyError(f"unknown op {op!r}")

@@ -110,12 +110,13 @@ def sharded_flash_attention(q, k, v, *, causal=True, window=None):
         return _fk(qb, kb, vb, causal=causal, window=window, q_offset=off,
                    bq=min(128, S_loc), bk=128, interpret=interpret)
 
-    fn = jax.shard_map(
+    from repro.parallel.sharding import compat_shard_map
+    fn = compat_shard_map(
         body, mesh=mesh,
         in_specs=(P(dp, None, tp, None), P(dp, None, None, None),
                   P(dp, None, None, None)),
         out_specs=P(dp, None, tp, None),
-        check_vma=False)  # pallas_call outputs carry no vma metadata
+        check=False)  # pallas_call outputs carry no replication/vma metadata
     return fn(q, k, v)
 
 

@@ -178,3 +178,20 @@ def constrain(x, spec: P):
         return jax.lax.with_sharding_constraint(x, spec)
     except Exception:
         return x
+
+
+def compat_shard_map(f, *, mesh, in_specs, out_specs, check: bool = True):
+    """shard_map across jax versions: ``jax.shard_map(check_vma=)`` on new
+    jax, ``jax.experimental.shard_map.shard_map(check_rep=)`` on 0.4.x.
+    ``check=False`` is required whenever the body contains a pallas_call
+    (no replication/vma rule is registered for it)."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check)
+        except TypeError:  # promotion window where the kwarg was check_rep
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)

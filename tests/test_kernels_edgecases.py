@@ -1,0 +1,205 @@
+"""Edge-case kernel parity (interpret mode): degenerate sparsity patterns,
+non-aligned shapes, and dtype accumulation parity vs. the jnp oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.formats import (BCSR, batched_bcsr_from_dense, bcsr_from_dense,
+                                random_dense_sparse)
+from repro.kernels import tuning
+from repro.kernels.spmm import ops as spmm_ops
+from repro.kernels.spmm.ref import spmm_ref
+from repro.kernels.spmspm import ops as spmspm_ops
+from repro.kernels.spmspm.ref import spmspm_ref
+
+RNG = np.random.default_rng(3)
+
+
+# ---------------------------------------------------------------------------
+# SpMM degenerate patterns
+# ---------------------------------------------------------------------------
+
+def test_spmm_all_zero_matrix():
+    """Every block-row empty: pad_empty_rows must fabricate the full stream."""
+    a = bcsr_from_dense(np.zeros((32, 32), np.float32), (8, 8))
+    assert a.nnzb == 0
+    b = jnp.asarray(RNG.standard_normal((32, 128)), jnp.float32)
+    got = spmm_ops.spmm(a, b, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((32, 128)))
+
+
+def test_spmm_single_nonzero_block():
+    dense = np.zeros((64, 64), np.float32)
+    dense[16:24, 40:48] = RNG.standard_normal((8, 8))
+    a = bcsr_from_dense(dense, (8, 8))
+    assert a.nnzb == 1
+    b = jnp.asarray(RNG.standard_normal((64, 128)), jnp.float32)
+    got = spmm_ops.spmm(a, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(spmm_ref(a, b)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_spmm_trailing_rows_empty():
+    """Empty block-rows at the *end* of the matrix (pad ordering edge)."""
+    dense = np.zeros((64, 64), np.float32)
+    dense[:8] = RNG.standard_normal((8, 64))
+    a = bcsr_from_dense(dense, (8, 8))
+    b = jnp.asarray(RNG.standard_normal((64, 128)), jnp.float32)
+    got = spmm_ops.spmm(a, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(spmm_ref(a, b)),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("N", [1, 7, 129, 200])
+def test_spmm_n_not_multiple_of_default_bn(N):
+    """N smaller / larger than (and coprime to) the tuned bn."""
+    a = bcsr_from_dense(random_dense_sparse(RNG, (32, 32), 0.4), (8, 8))
+    b = jnp.asarray(RNG.standard_normal((32, N)), jnp.float32)
+    got = spmm_ops.spmm(a, b, interpret=True)  # bn from the autotune table
+    assert got.shape == (32, N)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(spmm_ref(a, b)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_spmm_fp32_vs_bf16_accumulation():
+    """bf16 inputs accumulate in fp32 on the MXU path
+    (preferred_element_type): parity with the fp32 oracle within bf16
+    rounding of the *inputs* only."""
+    a_dense = random_dense_sparse(RNG, (64, 64), 0.3)
+    a32 = bcsr_from_dense(a_dense, (8, 8))
+    b32 = jnp.asarray(RNG.standard_normal((64, 128)), jnp.float32)
+    a16 = BCSR(indptr=a32.indptr, block_rows=a32.block_rows,
+               block_cols=a32.block_cols,
+               blocks=a32.blocks.astype(jnp.bfloat16),
+               shape=a32.shape, block=a32.block)
+    got16 = spmm_ops.spmm(a16, b32.astype(jnp.bfloat16), interpret=True)
+    # Oracle on the bf16-rounded inputs: the only divergence allowed is
+    # input rounding, NOT accumulation error.
+    ref16 = spmm_ref(
+        BCSR(indptr=a16.indptr, block_rows=a16.block_rows,
+             block_cols=a16.block_cols,
+             blocks=a16.blocks.astype(jnp.float32),
+             shape=a16.shape, block=a16.block),
+        b32.astype(jnp.bfloat16).astype(jnp.float32))
+    assert got16.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got16), np.asarray(ref16),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_spmm_batched_union_pattern():
+    """Batch elements with disjoint patterns share one union stream; each
+    element must still equal its own per-matrix product."""
+    d0 = np.zeros((32, 32), np.float32)
+    d0[:8, :8] = RNG.standard_normal((8, 8))
+    d1 = np.zeros((32, 32), np.float32)
+    d1[24:, 24:] = RNG.standard_normal((8, 8))
+    a = batched_bcsr_from_dense(np.stack([d0, d1]), (8, 8))
+    assert a.nnzb == 2  # union of two disjoint single-block patterns
+    d = jnp.asarray(RNG.standard_normal((2, 32, 96)), jnp.float32)
+    got = spmm_ops.spmm_batched(a, d, interpret=True)
+    for i, m in enumerate([d0, d1]):
+        want = spmm_ref(bcsr_from_dense(m, (8, 8)), d[i])
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_batched_container_roundtrip():
+    stack = np.stack([random_dense_sparse(RNG, (32, 32), 0.25)
+                      for _ in range(3)])
+    a = batched_bcsr_from_dense(stack, (8, 8))
+    np.testing.assert_allclose(np.asarray(a.todense()), stack)
+
+
+# ---------------------------------------------------------------------------
+# SpMSpM degenerate patterns
+# ---------------------------------------------------------------------------
+
+def test_spmspm_single_match():
+    """Exactly one key match across the whole product."""
+    A = np.zeros((8, 64), np.float32)
+    B = np.zeros((64, 8), np.float32)
+    A[3, 17] = 2.0
+    B[17, 5] = 3.0
+    ak, av = spmspm_ops.dense_to_ell_rows(A)
+    bk, bv = spmspm_ops.dense_to_ell_cols(B)
+    got = np.asarray(spmspm_ops.spmspm(ak, av, bk, bv, interpret=True))
+    want = np.zeros((8, 8), np.float32)
+    want[3, 5] = 6.0
+    np.testing.assert_allclose(got, want)
+
+
+def test_spmspm_no_matches():
+    """Disjoint key sets: all-pairs comparison must produce exact zeros."""
+    A = np.zeros((8, 64), np.float32)
+    B = np.zeros((64, 8), np.float32)
+    A[:, :32] = RNG.standard_normal((8, 32))
+    B[32:, :] = RNG.standard_normal((32, 8))
+    ak, av = spmspm_ops.dense_to_ell_rows(A)
+    bk, bv = spmspm_ops.dense_to_ell_cols(B)
+    got = np.asarray(spmspm_ops.spmspm(ak, av, bk, bv, interpret=True))
+    np.testing.assert_array_equal(got, np.zeros((8, 8)))
+
+
+def test_spmspm_r_c_not_tile_multiples():
+    """R/C coprime to the tuned (rt, ct): ops pads with INVALID streams."""
+    A = random_dense_sparse(RNG, (13, 64), 0.3)
+    B = random_dense_sparse(RNG, (64, 11), 0.2)
+    ak, av = spmspm_ops.dense_to_ell_rows(A)
+    bk, bv = spmspm_ops.dense_to_ell_cols(B)
+    got = spmspm_ops.spmspm(ak, av, bk, bv, interpret=True)
+    assert got.shape == (13, 11)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(spmspm_ref(ak, av, bk, bv, 64)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_spmspm_fp32_vs_bf16_values():
+    """bf16 value streams accumulate in fp32 inside the kernel."""
+    A = random_dense_sparse(RNG, (16, 64), 0.3)
+    B = random_dense_sparse(RNG, (64, 16), 0.2)
+    ak, av = spmspm_ops.dense_to_ell_rows(A)
+    bk, bv = spmspm_ops.dense_to_ell_cols(B)
+    got16 = spmspm_ops.spmspm(ak, jnp.asarray(av).astype(jnp.bfloat16),
+                              bk, jnp.asarray(bv).astype(jnp.bfloat16),
+                              rt=8, ct=8, interpret=True)
+    ref16 = spmspm_ref(ak, np.asarray(jnp.asarray(av).astype(jnp.bfloat16)
+                                      .astype(jnp.float32)),
+                       bk, np.asarray(jnp.asarray(bv).astype(jnp.bfloat16)
+                                      .astype(jnp.float32)), 64)
+    assert got16.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got16), np.asarray(ref16),
+                               atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Autotune table sanity
+# ---------------------------------------------------------------------------
+
+def test_tuning_alignment_invariants():
+    for n in (1, 100, 128, 1000, 4096):
+        for dt in (jnp.float32, jnp.bfloat16):
+            bn = tuning.spmm_bn(n, dt)
+            assert bn % tuning.LANE == 0 and bn >= tuning.LANE
+    rt, ct = tuning.spmspm_tiles(13, 11, 32, 32)
+    assert rt % tuning.SUBLANE == 0 and ct % tuning.SUBLANE == 0
+    t2 = tuning.stencil_tile((40, 40))
+    assert len(t2) == 2 and t2[-1] % tuning.LANE == 0
+    t3 = tuning.stencil_tile((10, 10, 200))
+    assert len(t3) == 3 and t3[-1] % tuning.LANE == 0
+
+
+def test_tuning_lookup_front_door():
+    assert set(tuning.lookup("spmm", n=256)) == {"bn"}
+    assert set(tuning.lookup("spmspm", r=16, c=16, la=8, lb=8)) == {"rt", "ct"}
+    assert set(tuning.lookup("stencil", interior=(32, 200))) == {"tile"}
+    with pytest.raises(KeyError):
+        tuning.lookup("nope")
+
+
+def test_tuning_register_override():
+    tuning.register("spmm", jnp.float32, {"bn": 256}, platform="cpu")
+    try:
+        assert tuning.spmm_bn(1024, jnp.float32) == 256
+    finally:
+        tuning.register("spmm", jnp.float32, {"bn": 128}, platform="cpu")
+    assert tuning.spmm_bn(1024, jnp.float32) == 128

@@ -1,5 +1,8 @@
 """Per-arch smoke tests: reduced configs, one forward/train step on CPU,
-shape + finiteness assertions, and prefill-vs-decode consistency."""
+shape + finiteness assertions, and prefill-vs-decode consistency.
+
+Slow tier (minutes per arch on CPU): deselected from the default run,
+enable with ``--run-slow`` (see tests/README.md)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,6 +10,8 @@ import pytest
 
 from repro.configs import ARCH_NAMES, get_smoke
 from repro.models import model as M
+
+pytestmark = pytest.mark.slow
 
 KEY = jax.random.PRNGKey(0)
 

@@ -1,9 +1,14 @@
-"""Property-based tests (hypothesis) on the system's core invariants."""
+"""Property-based tests (hypothesis) on the system's core invariants.
+
+The whole module is skipped when ``hypothesis`` is not installed (the CI
+container does not ship it); install it locally to run the property sweep."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.formats import (INVALID_KEY, bcsr_from_dense, coo_from_dense,
                                 csr_from_dense)
