@@ -1,15 +1,17 @@
 """Beyond-paper: MoE dispatch as SpMM (the SU technique inside the LM stack).
 
 Compares expert dispatch formulations on a Scout-like layer:
-* ``su_gather``  -- index-stream dispatch (gather by slot; the production
-  path in repro.models.moe, SU indirection).
+* ``dispatch=gather`` -- index-stream dispatch (gather by slot; the default
+  production backend in repro.models.moe, SU indirection).
+* ``dispatch=bcsr``   -- the same layer with the dispatch matrix built as a
+  :class:`~repro.core.formats.BatchedBCSR` and run through
+  ``engine.shard_spmm_batched`` / the SpMM Pallas kernel (interpret mode on
+  CPU; correctness + stream accounting).  The chosen tiles are registered
+  in ``kernels.tuning`` so the production path picks them up.
 * ``onehot_einsum`` -- dense one-hot dispatch matmul (the no-SU analogue;
   O(T*E*C*d) instead of O(T*d)).
-* ``bcsr_kernel`` -- the dispatch expressed as BCSR x dense on the actual
-  SpMM Pallas kernel (interpret mode; correctness + stream accounting).
-* ``bcsr_batched`` -- per-expert dispatch matrices as one BatchedBCSR
-  (shared union index stream) through the vmapped kernel: the MoE-style
-  many-sparse-matmuls-in-one-call path the engine shards over devices.
+* ``bcsr_kernel`` / ``bcsr_batched`` -- raw dispatch-matrix x dense through
+  the (batched) SpMM kernel outside the layer, for stream accounting.
 """
 from __future__ import annotations
 
@@ -22,11 +24,14 @@ import numpy as np
 from benchmarks.common import row, time_fn
 from repro.configs import get_smoke
 from repro.core.formats import batched_bcsr_from_dense, bcsr_from_dense
+from repro.kernels import tuning
 from repro.kernels.spmm import ops as spmm_ops
 from repro.models import moe as moe_mod
 
 T, D, E, CF = 4096, 256, 16, 1.25
 FF = 512
+# reduced shape for the in-layer bcsr backend (interpret-mode kernel)
+TB, DB = 512, 128
 
 
 def run() -> list:
@@ -38,7 +43,8 @@ def run() -> list:
     params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
     x = jnp.asarray(rng.standard_normal((1, T, D)), jnp.float32)
 
-    su = jax.jit(lambda p, x: moe_mod.apply_moe(p, x, cfg))
+    su = jax.jit(lambda p, x: moe_mod.apply_moe(p, x, cfg,
+                                                dispatch="gather")[0])
     t_su = time_fn(su, params, x)
 
     @jax.jit
@@ -59,6 +65,29 @@ def run() -> list:
         return (back * top_g).reshape(1, T, D)
 
     t_oh = time_fn(onehot, params, x)
+
+    # In-layer backend A/B on a reduced shape: same layer, gather vs the
+    # dispatch matrix as BatchedBCSR through the sharded SpMM kernel.
+    # Eager on purpose -- the eager path compacts the block stream to the
+    # union nonzero pattern (the jit path pays the full-grid stream).
+    cfg_b = dataclasses.replace(cfg, d_model=DB)
+    params_b = moe_mod.init_moe(jax.random.PRNGKey(0), cfg_b)
+    xb_in = jnp.asarray(rng.standard_normal((1, TB, DB)), jnp.float32)
+    tiles = tuning.moe_dispatch_tiles(DB, jnp.float32)
+    # pin the CPU interpret-mode row to the tiles this comparison actually
+    # ran (explicit platform: never clobber the TPU row with a bn that was
+    # shape-clamped to this benchmark's small d_model)
+    tuning.register("moe_dispatch", jnp.float32,
+                    {"block": tiles["block"], "bn": tiles["bn"]},
+                    platform="cpu")
+    gth = jax.jit(lambda p, x: moe_mod.apply_moe(p, x, cfg_b,
+                                                 dispatch="gather")[0])
+    t_gth = time_fn(gth, params_b, xb_in)
+    t_bcsr = time_fn(
+        lambda: moe_mod.apply_moe(params_b, xb_in, cfg_b, dispatch="bcsr")[0])
+    ref = gth(params_b, xb_in)
+    got = moe_mod.apply_moe(params_b, xb_in, cfg_b, dispatch="bcsr")[0]
+    assert float(jnp.abs(ref - got).max()) == 0.0, "backends diverge"
 
     # BCSR-on-kernel: dispatch matrix (T x T permutation-ish) as block-sparse
     sel = rng.permutation(T)[: T // 4]
@@ -86,6 +115,12 @@ def run() -> list:
                     f"tokens={T};experts={E};capacity_factor={CF}"))
     rows.append(row("moe/onehot_einsum_dispatch", t_oh * 1e6,
                     f"speedup_su_vs_onehot={t_oh / t_su:.2f}x"))
+    rows.append(row("moe/backend_gather(jit)", t_gth * 1e6,
+                    f"tokens={TB};experts={E};d={DB}"))
+    rows.append(row("moe/backend_bcsr_engine(interp)", t_bcsr * 1e6,
+                    f"tokens={TB};experts={E};d={DB};"
+                    f"block={tiles['block']};bn={tiles['bn']};"
+                    f"gather_vs_bcsr={t_bcsr / t_gth:.2f}x"))
     rows.append(row("moe/bcsr_kernel_dispatch(interp)", t_k * 1e6,
                     f"useful_flops={useful};block_density={a.density():.4f}"))
     rows.append(row("moe/bcsr_batched_dispatch(interp)", t_bat * 1e6,

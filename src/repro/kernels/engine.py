@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import functools
 import os
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -42,15 +43,35 @@ from repro.kernels.spmm.kernel import spmm_bcsr
 from repro.kernels.spmspm.kernel import spmspm_ell
 
 
-def ensure_virtual_devices(n: int = 4) -> None:
+def ensure_virtual_devices(n: int = 4, *, strict: bool = False) -> None:
     """Force >= ``n`` virtual CPU devices (tests / CLI demos on one host).
 
     Must run before the first jax backend touch; a no-op if XLA_FLAGS
-    already forces a count or a real multi-device backend exists."""
+    already forces a count or a real multi-device backend exists.  The env
+    flag cannot take effect once the backend has initialized, so if that
+    already happened with fewer than ``n`` devices this *warns* (or raises
+    under ``strict=True``) instead of silently leaving sharded tests running
+    on a single device."""
     flags = os.environ.get("XLA_FLAGS", "")
     if "xla_force_host_platform_device_count" not in flags:
         os.environ["XLA_FLAGS"] = (
             f"{flags} --xla_force_host_platform_device_count={n}".strip())
+    initialized = False
+    try:  # private, but the public API offers no side-effect-free probe
+        from jax._src import xla_bridge as _xb
+        initialized = bool(getattr(_xb, "_backends", None))
+    except Exception:
+        initialized = False
+    if initialized and jax.local_device_count() < n:
+        msg = (f"ensure_virtual_devices({n}): the JAX backend already "
+               f"initialized with {jax.local_device_count()} device(s); the "
+               "XLA_FLAGS override cannot take effect in this process. "
+               "Sharded code will run on fewer devices than requested -- "
+               "call ensure_virtual_devices() before any jax API that "
+               "touches the backend (or set XLA_FLAGS in the environment).")
+        if strict:
+            raise RuntimeError(msg)
+        warnings.warn(msg, RuntimeWarning, stacklevel=2)
 
 
 def _interpret_default(interpret: Optional[bool]) -> bool:

@@ -55,6 +55,16 @@ def decode_attention(q1, k_cache, v_cache, *, kv_len=None, window=None,
     Decode is memory-bound (one Q row streams the whole cache); the jnp path
     lowers to a clean gather+reduce that XLA fuses, so the kernel is optional.
     ``kv_len`` masks cache tail beyond the current length.
+
+    Arithmetic is *prefix-aligned* with ``chunked_attention`` (the prefill
+    path): the narrow-dtype cast applies to the UNNORMALIZED ``exp(s - m)``
+    weights and the f32-accumulated PV product is divided by the f32 row sum
+    afterwards.  Normalizing before the cast quantizes a different quantity
+    than prefill quantizes, which is enough hidden-state noise (~1 bf16 ulp
+    per layer) to flip near-tie MoE router argmaxes between decode and
+    prefill (the old `test_decode_matches_prefill[llama4-scout]` failure).
+    With the ordering aligned, stepwise decode reproduces prefill logits
+    bit-for-bit on the smoke configs.
     """
     B, Hq, _, D = q1.shape
     _, Hkv, S, _ = k_cache.shape
@@ -72,9 +82,12 @@ def decode_attention(q1, k_cache, v_cache, *, kv_len=None, window=None,
             s = jnp.where(pos >= limit - window, s, -1e30)
     elif window is not None:
         s = jnp.where(pos >= S - window, s, -1e30)
-    p = jax.nn.softmax(s, axis=-1)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)                      # unnormalized, like the chunked path
+    l = p.sum(axis=-1, keepdims=True)       # f32 row sum
     out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
+    out = out / jnp.where(l == 0, 1.0, l)
     return out.reshape(B, Hq, 1, D).astype(q1.dtype)
 
 

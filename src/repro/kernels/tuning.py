@@ -81,6 +81,16 @@ _TABLE: Dict[Tuple[str, str, str], Dict[str, Any]] = {
     ("spmspm", "f32", "cpu"): {"rt": 8, "ct": 8},
     ("spmspm", "bf16", "cpu"): {"rt": 8, "ct": 8},
     ("spmspm", "fp8", "cpu"): {"rt": 8, "ct": 8},
+    # MoE dispatch-as-SpMM (models.moe "bcsr" backend): ``block`` tiles the
+    # 0/1 (slot, token) dispatch matrix -- small square blocks track the
+    # one-nonzero-per-column structure; ``bn`` is the d_model N-tile of the
+    # token operand streamed through the SpMM kernel.
+    ("moe_dispatch", "f32", "tpu"): {"block": (8, 8), "bn": 256},
+    ("moe_dispatch", "bf16", "tpu"): {"block": (8, 8), "bn": 512},
+    ("moe_dispatch", "fp8", "tpu"): {"block": (8, 8), "bn": 512},
+    ("moe_dispatch", "f32", "cpu"): {"block": (8, 8), "bn": 128},
+    ("moe_dispatch", "bf16", "cpu"): {"block": (8, 8), "bn": 128},
+    ("moe_dispatch", "fp8", "cpu"): {"block": (8, 8), "bn": 128},
     # Stencil: per-ndim halo tiles; minor dim pinned to the 128 lane width.
     ("stencil2d", "f32", "tpu"): {"tile": (256, 256)},
     ("stencil2d", "bf16", "tpu"): {"tile": (256, 512)},
@@ -115,20 +125,21 @@ def _row(op: str, dtype) -> Dict[str, Any]:
 # Per-op lookups (shape-aware clamping on top of the table row).
 # ---------------------------------------------------------------------------
 
-def spmm_bn(n: int, dtype=jnp.float32, *, bk: int = 8) -> int:
-    """N-tile for the BCSR SpMM kernel.
-
-    Clamps the table bn down to N rounded up to the lane width (a tile wider
-    than the whole operand is pure padding), and down again if the dense
-    K-tile + accumulator would exceed the VMEM budget.
-    """
-    bn = int(_row("spmm", dtype)["bn"])
+def _clamp_bn(bn: int, n: int, dtype, bk: int) -> int:
+    """Clamp an SpMM-style N-tile: no wider than N rounded up to the lane
+    width (a tile wider than the whole operand is pure padding), then halved
+    while the (bk, bn) dense tile + (8, bn) f32 accumulator, double-buffered,
+    would exceed the VMEM budget."""
     n_aligned = -(-max(n, 1) // LANE) * LANE
     bn = min(bn, max(LANE, n_aligned))
-    # working set: (bk, bn) dense tile + (8, bn) f32 accumulator, double-buffered
     while bn > LANE and 2 * (bk * bn * _dtype_bytes(dtype) + SUBLANE * bn * 4) > VMEM_BUDGET:
         bn //= 2
     return bn
+
+
+def spmm_bn(n: int, dtype=jnp.float32, *, bk: int = 8) -> int:
+    """N-tile for the BCSR SpMM kernel (table row + shape/VMEM clamp)."""
+    return _clamp_bn(int(_row("spmm", dtype)["bn"]), n, dtype, bk)
 
 
 def spmspm_tiles(r: int, c: int, la: int, lb: int, dtype=jnp.float32
@@ -144,6 +155,16 @@ def spmspm_tiles(r: int, c: int, la: int, lb: int, dtype=jnp.float32
         rt = max(SUBLANE, rt // 2)
         ct = max(SUBLANE, ct // 2)
     return rt, ct
+
+
+def moe_dispatch_tiles(d_model: int, dtype=jnp.float32) -> Dict[str, Any]:
+    """{"block": (bm, bk), "bn": int} for the MoE dispatch-as-SpMM path;
+    ``bn`` (the d_model N-tile of the token operand) gets the same
+    shape/VMEM clamp as :func:`spmm_bn`."""
+    row = _row("moe_dispatch", dtype)
+    bm, bk = row["block"]
+    return {"block": (int(bm), int(bk)),
+            "bn": _clamp_bn(int(row["bn"]), d_model, dtype, bk)}
 
 
 def stencil_tile(interior: Tuple[int, ...], dtype=jnp.float32) -> Tuple[int, ...]:
@@ -169,6 +190,8 @@ def lookup(op: str, *, dtype=jnp.float32, **shape) -> Dict[str, Any]:
         rt, ct = spmspm_tiles(shape.get("r", SUBLANE), shape.get("c", SUBLANE),
                               shape.get("la", 1), shape.get("lb", 1), dtype)
         return {"rt": rt, "ct": ct}
+    if op == "moe_dispatch":
+        return moe_dispatch_tiles(shape.get("d_model", LANE), dtype)
     if op == "stencil":
         return {"tile": stencil_tile(shape["interior"], dtype)}
     raise KeyError(f"unknown op {op!r}")

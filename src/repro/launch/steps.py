@@ -59,6 +59,7 @@ def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
                     optimizer: Optional[AdamW] = None, *,
                     seq_chunk: int = 512, impl: str = "chunked",
                     seq_parallel: bool = True, moe_impl: str = "pjit",
+                    moe_dispatch: Optional[str] = None,
                     microbatches: Optional[int] = None,
                     attn_impl: Optional[str] = None):
     """Returns (train_step, (in_shardings...), (out_shardings...)).
@@ -82,7 +83,8 @@ def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
             with pctx.activation_specs(act=act_spec, moe=moe_spec,
                                        logit=logit_spec, moe_groups=moe_groups,
                                        moe_combine=moe_combine,
-                                       moe_impl=moe_impl, mesh=mesh):
+                                       moe_impl=moe_impl,
+                                       moe_dispatch=moe_dispatch, mesh=mesh):
                 return M.loss_fn(p, tok, cfg, embeddings=emb,
                                  impl=attn_impl or impl, seq_chunk=seq_chunk)
 
@@ -126,7 +128,16 @@ def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh,
 
 def make_prefill_step(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
                       impl: str = "chunked", seq_parallel: bool = True,
-                      moe_impl: str = "pjit"):
+                      moe_impl: str = "pjit",
+                      moe_dispatch: Optional[str] = None):
+    if cfg.n_experts and moe_impl == "shard_map":
+        import warnings
+        warnings.warn(
+            "make_prefill_step(moe_impl='shard_map'): the shard_map MoE impl "
+            "is train-only and cannot fill the decode cache's routing "
+            "occupancy, so a subsequent decode would see a different MoE "
+            "drop set than this prefill. Serve with the pjit impl.",
+            RuntimeWarning, stacklevel=2)
     dp = _dp_axis(mesh)
     act_spec = P(dp, "model", None) if seq_parallel else P(dp, None, None)
     moe_spec = P("model", dp, None, None) if cfg.n_experts else None
@@ -136,8 +147,8 @@ def make_prefill_step(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
     def prefill_step(params, tokens, embeddings=None):
         with pctx.activation_specs(act=act_spec, moe=moe_spec,
                                    moe_groups=moe_groups,
-                                   moe_combine=moe_combine,
-                                   moe_impl=moe_impl, mesh=mesh):
+                                   moe_combine=moe_combine, moe_impl=moe_impl,
+                                   moe_dispatch=moe_dispatch, mesh=mesh):
             return M.prefill(params, tokens, cfg, max_seq=shape.seq_len,
                              embeddings=embeddings, impl=impl)
 
@@ -149,7 +160,8 @@ def make_prefill_step(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
 
 
 def make_serve_step(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
-                    greedy: bool = True):
+                    greedy: bool = True,
+                    moe_dispatch: Optional[str] = None):
     """One-token decode + greedy sampling."""
     dp = _dp_axis(mesh)
     moe_spec = P("model", dp, None, None) if cfg.n_experts else None
@@ -158,7 +170,8 @@ def make_serve_step(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
 
     def serve_step(params, cache, pos, tokens_1):
         with pctx.activation_specs(moe=moe_spec, moe_groups=moe_groups,
-                                   moe_combine=moe_combine):
+                                   moe_combine=moe_combine,
+                                   moe_dispatch=moe_dispatch):
             logits, new_cache = M.decode_step(params, cfg, cache, pos, tokens_1)
         nxt = jnp.argmax(logits[:, -1, : cfg.vocab_size],
                          axis=-1).astype(jnp.int32)[:, None]

@@ -39,6 +39,13 @@ class ArchConfig:
     top_k: int = 1
     capacity_factor: float = 1.25
     moe_shared_expert: bool = False      # Llama-4 style always-on shared expert
+    # dispatch backend: "gather" (SU index-stream gather) or "bcsr" (dispatch
+    # matrix as BatchedBCSR through the sharded SpMM Pallas kernel); may be
+    # overridden per-trace via repro.parallel.context.MOE_DISPATCH
+    moe_dispatch: str = "gather"
+    # raise (instead of warn) when the requested dispatch grouping cannot
+    # align with the batch dim -- see models.moe.apply_moe
+    moe_strict_dispatch: bool = False
     # ssm (mamba2)
     ssm_state: int = 0
     ssm_head_dim: int = 64

@@ -95,12 +95,22 @@ def apply_block(kind: str, p: Params, x, cfg: ArchConfig, *, impl="chunked",
             cache=attn_cache, cache_len=pos, collect_kv=collect_kv)
         x = x + a
         h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        moe_counts = None
         if kind == "attn+moe":
-            f = moe.apply_moe(p["ffn"], h, cfg)
+            # thread the routing occupancy (prefix-stable slots): decode
+            # passes the cached per-(row, expert) counts + absolute position
+            f, moe_counts = moe.apply_moe(
+                p["ffn"], h, cfg, counts=cache.get("moe") if cache else None,
+                pos=pos)
         else:
             f = L.apply_mlp(p["ffn"], h, cfg)
         x = x + f
-        return x, ({"attn": new_attn} if new_attn is not None else None)
+        if new_attn is None:
+            return x, None
+        new_cache = {"attn": new_attn}
+        if kind == "attn+moe":
+            new_cache["moe"] = moe_counts
+        return x, new_cache
     if kind == "mamba":
         h = L.rmsnorm(p["ln"], x, cfg.norm_eps)
         m, new_c = mamba2.apply_mamba(p["mixer"], h, cfg, cache=cache,
@@ -332,7 +342,13 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
                 "shift_c": jnp.zeros((cfg.n_repeats, batch, 1, d), dtype)}
 
     def slot_cache(kind, n):
-        if kind in ("attn", "attn_global", "attn+moe", "shared_attn"):
+        if kind == "attn+moe":
+            # MoE routing occupancy: per-(row, expert) counts make decode
+            # slot assignment prefix-stable (see models.moe)
+            c = attn_cache(None)
+            c["moe"] = jnp.zeros((cfg.n_repeats, batch, cfg.n_experts),
+                                 jnp.int32)
+        elif kind in ("attn", "attn_global", "shared_attn"):
             c = attn_cache(None)
         elif kind == "attn_local":
             c = attn_cache(cfg.local_window)
@@ -374,8 +390,8 @@ def _decode_block_attn(kind, p, x, cfg, cache, pos, dtype):
         a = a.transpose(0, 2, 1, 3).reshape(x.shape[0], 1, cfg.n_heads * cfg.hd)
         x = x + a @ p["attn"]["wo"].astype(a.dtype)
         h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
-        f = (moe.apply_moe(p["ffn"], h, cfg) if kind == "attn+moe"
-             else L.apply_mlp(p["ffn"], h, cfg))
+        # ring buffers exist only for attn_local layers, which are never MoE
+        f = L.apply_mlp(p["ffn"], h, cfg)
         return x + f, {"attn": {"k": knew, "v": vnew}}
     return apply_block(kind, p, x, cfg, cache=cache, pos=pos)
 

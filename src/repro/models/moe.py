@@ -1,25 +1,59 @@
-"""Mixture-of-Experts with SU-indirection dispatch (Llama-4 style).
+"""Mixture-of-Experts: prefix-stable routing + pluggable SU dispatch.
 
 This is where the paper's technique is first-class in the LM stack: routing
-tokens to experts *is* a sparse-dense product. The router's expert-assignment
-indices form the SU index stream; dispatch gathers token rows by index
-(`indirect_gather`), the grouped expert GEMM consumes dense (E, C, d) tiles,
-and combine scatters results back (`indirect_scatter_add`). The block-sparse
-formulation (BCSR over the dispatch matrix) runs on the SpMM Pallas kernel in
-``benchmarks/bench_moe.py``.
+tokens to experts *is* a sparse-dense product, and the layer is split into
+the two stages that framing implies.
 
-Capacity-based dropless-approx routing (Switch-style): per-expert capacity
-C = ceil(T/E * capacity_factor); overflow tokens are dropped (contribute
-zero), standard at scale. Expert-parallel: the leading E dim of expert
-weights shards over the "model" axis; the gather/scatter becomes an
-all-to-all under pjit.
+**Routing stage** (:func:`route_tokens`) -- prefix-stable by construction.
+The slot of a token in its expert's queue is a pure function of the token's
+own (batch row, position, expert) history: slots are assigned by cumsum
+along the *sequence* dim per (row, expert), offset by an occupancy count
+``counts[row, expert]`` carried across calls (the decode cache threads it),
+and the keep/drop decision compares the slot against the *prefix* capacity
+
+    C(t) = ceil((t + 1) / E * capacity_factor)
+
+where ``t`` is the token's absolute position.  Because neither the slot nor
+the capacity depends on which other rows share the batch or on how many
+future tokens follow, a one-token decode step reproduces exactly the slot --
+and the drop decision -- the same token gets inside a prefill.  (The old
+formulation cumsummed over the flattened in-batch token stream with a
+whole-batch capacity, so decode saw a different drop set than prefill;
+see ROADMAP PR-2.)  Occupancy counts *all* routed tokens, kept or dropped,
+so the queue position is a plain cumsum of the assignment one-hots.
+
+**Dispatch stage** -- ``moe_dispatch="gather" | "bcsr"`` (ArchConfig field,
+overridable via ``repro.parallel.context.MOE_DISPATCH`` or the ``dispatch=``
+argument):
+
+* ``"gather"`` -- SU indirection: the inverse index stream gathers token
+  rows into dense (E, B, C, d) capacity tiles (``jnp.take_along_axis``).
+* ``"bcsr"``   -- the dispatch matrix itself is materialized as a
+  :class:`~repro.core.formats.BatchedBCSR` (one shared index stream, one
+  0/1 block set per batch row) and run through
+  ``repro.kernels.engine.shard_spmm_batched`` -- the SpMM Pallas kernel on
+  the device mesh.  Under tracing (inside ``lax.scan``/``jit``) the block
+  stream falls back to the full grid (data-dependent sparsity cannot change
+  static shapes); eagerly it compacts to the union nonzero-block pattern.
+  Tile sizes come from ``kernels.tuning`` (op ``"moe_dispatch"``).
+
+Both backends produce bit-identical dispatch buffers (the BCSR path
+multiplies by exact 0/1 blocks with f32 accumulation), so the backends are
+interchangeable mid-deployment.  The grouped expert GEMM consumes dense
+(E, B*C, d) tiles and combine gathers results back by the same index stream.
+
+Expert-parallel: the leading E dim of expert weights shards over the
+"model" axis; the gather/scatter becomes an all-to-all under pjit.
 """
 from __future__ import annotations
 
+import warnings
+from typing import NamedTuple, Optional
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.su import indirect_gather
 from repro.models.config import ArchConfig
 from repro.models.layers import init_mlp, apply_mlp
 
@@ -60,81 +94,247 @@ def _expert_ffn(experts, xe, mlp_type: str):
     return jnp.einsum("ecf,efd->ecd", h, experts["w_down"].astype(cd))
 
 
-def apply_moe(p, x, cfg: ArchConfig, *, groups: int = None):
-    """x: (B, S, d) -> (B, S, d). Top-1 routing (per pool spec) w/ capacity.
+# ----------------------------------------------------------------- routing --
 
-    Grouped dispatch: tokens are viewed as (G, T/G) where G matches the data
-    shards; routing slots are computed *within* each group so the cumsum
-    stays shard-local, and the only cross-shard movement is the (E, G, Cg, d)
-    dispatch -- the EP all-to-all. (The naive global-cumsum formulation
-    serializes the whole token stream through one device; measured in
-    EXPERIMENTS.md SPerf.)
+class Routing(NamedTuple):
+    """Per-token routing decision (all leading dims (B, S))."""
+    gate: jax.Array        # f32 top-1 router probability
+    expert_id: jax.Array   # int32 assigned expert
+    slot: jax.Array        # int32 absolute position in the (row, expert) queue
+    within: jax.Array      # int32 queue position within THIS call (slot - base)
+    keep: jax.Array        # bool  slot < prefix capacity at the token's position
+    new_counts: jax.Array  # (B, E) int32 occupancy after this call
+    logits: jax.Array      # (B, S, E) f32 router logits (for aux losses)
+
+
+def prefix_capacity(t, n_experts: int, capacity_factor: float) -> jax.Array:
+    """Per-(row, expert) queue capacity after ``t + 1`` tokens:
+    ``ceil((t+1)/E * capacity_factor)``.  Traceable in ``t``; decode and
+    prefill call it with the same absolute positions, so the keep sets are
+    bit-identical (the multiply happens in f32 in both)."""
+    t1 = (jnp.asarray(t, jnp.int32) + 1).astype(jnp.float32)
+    return jnp.ceil(t1 * np.float32(capacity_factor / n_experts)).astype(jnp.int32)
+
+
+def dispatch_capacity(S: int, cfg: ArchConfig, pos0=0) -> int:
+    """Static capacity of the dispatch buffer for an S-token call starting at
+    absolute position ``pos0``.  Kept tokens satisfy ``within < S`` and
+    ``within <= slot < C(pos0 + S - 1)``, so the min of the two bounds is a
+    safe buffer size; when ``pos0`` is traced (stepwise decode) only the
+    S bound is static.  Uses the same f32 arithmetic as
+    :func:`prefix_capacity` so the bound can never be under the keep test."""
+    if not isinstance(pos0, (int, np.integer)):
+        return max(1, S)
+    cap = int(np.ceil(np.float32(pos0 + S)
+                      * np.float32(cfg.capacity_factor / cfg.n_experts)))
+    return max(1, min(S, cap))
+
+
+def route_tokens(router: jax.Array, x: jax.Array, cfg: ArchConfig, *,
+                 counts: Optional[jax.Array] = None, pos0=0) -> Routing:
+    """Top-1 routing with prefix-stable slot assignment.
+
+    x: (B, S, d); ``counts``: (B, E) int32 occupancy carried from previous
+    calls on the same rows (None = fresh sequence); ``pos0``: absolute
+    position of x[:, 0] (int or traced scalar).  The decision for token
+    (b, s) depends only on row b's tokens at positions <= pos0 + s.
+    """
+    B, S, _ = x.shape
+    E = cfg.n_experts
+    logits = x.astype(jnp.float32) @ router.astype(jnp.float32)   # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_id = jax.lax.top_k(probs, 1)                     # top-1 per pool spec
+    gate, expert_id = gate[..., 0], expert_id[..., 0].astype(jnp.int32)
+
+    onehot = jax.nn.one_hot(expert_id, E, dtype=jnp.int32)        # (B, S, E)
+    if counts is None:
+        counts = jnp.zeros((B, E), jnp.int32)
+    # queue position = prior same-(row, expert) tokens, kept OR dropped
+    within = ((jnp.cumsum(onehot, axis=1) - onehot) * onehot).sum(-1)
+    base = (counts[:, None, :] * onehot).sum(-1)                  # (B, S)
+    slot = base + within
+    t_abs = jnp.asarray(pos0, jnp.int32) + jnp.arange(S, dtype=jnp.int32)
+    keep = slot < prefix_capacity(t_abs, E, cfg.capacity_factor)[None, :]
+    new_counts = counts + onehot.sum(axis=1)
+    return Routing(gate, expert_id, slot, within, keep, new_counts, logits)
+
+
+# ---------------------------------------------------------------- dispatch --
+
+def _dispatch_gather(xt: jax.Array, flat_slot: jax.Array, E: int, C: int):
+    """SU indirection dispatch: inverse index stream + gather.
+
+    xt: (B, S, d); flat_slot: (B, S) in [0, E*C] (E*C = dropped).
+    Returns (E, B, C, d) capacity tiles."""
+    B, S, d = xt.shape
+    inv = jnp.full((B, E * C + 1), S, jnp.int32)
+    inv = inv.at[jnp.arange(B)[:, None], flat_slot].set(
+        jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S)),
+        mode="drop")[:, : E * C]
+    xt_pad = jnp.concatenate([xt, jnp.zeros((B, 1, d), xt.dtype)], axis=1)
+    xe = jnp.take_along_axis(xt_pad, inv[..., None], axis=1)      # (B, E*C, d)
+    return xe.reshape(B, E, C, d).transpose(1, 0, 2, 3)
+
+
+def _dispatch_bcsr(xt: jax.Array, flat_slot: jax.Array, E: int, C: int):
+    """Dispatch-as-SpMM: per-row 0/1 dispatch matrices as one BatchedBCSR
+    (shared index stream) through the sharded SpMM Pallas kernel.
+
+    Eagerly the stream compacts to the union nonzero-block pattern; under
+    tracing the pattern is the full grid (static shapes), which is the
+    one-hot-einsum cost paid on the *kernel* path.  Returns (E, B, C, d),
+    bit-identical to :func:`_dispatch_gather` (0/1 blocks, f32 accumulate).
+    """
+    from repro.core.formats import BatchedBCSR
+    from repro.kernels import engine, tuning
+
+    B, S, d = xt.shape
+    tiles = tuning.moe_dispatch_tiles(d, xt.dtype)
+    bm, bk = tiles["block"]
+    M = E * C
+    Mp = -(-M // bm) * bm
+    Sp = -(-S // bk) * bk
+    gm, gn = Mp // bm, Sp // bk
+
+    # dense (B, Mp, Sp) dispatch matrix; dropped tokens write the slice-off row
+    rows = jnp.where(flat_slot < M, flat_slot, Mp)
+    disp = jnp.zeros((B, Mp + 1, Sp), xt.dtype)
+    disp = disp.at[jnp.arange(B)[:, None], rows,
+                   jnp.arange(S, dtype=jnp.int32)[None, :]].set(1)[:, :Mp]
+    tiles4 = disp.reshape(B, gm, bm, gn, bk).transpose(0, 1, 3, 2, 4)
+
+    if isinstance(tiles4, jax.core.Tracer):
+        # static shapes under jit/scan: the stream is the full grid
+        brows, bcols = np.nonzero(np.ones((gm, gn), bool))
+    else:
+        nz = np.array(jnp.any(tiles4 != 0, axis=(0, 3, 4)))
+        nz[:, 0] = True  # kernel contract: every block-row appears
+        brows, bcols = np.nonzero(nz)
+    indptr = np.zeros(gm + 1, np.int32)
+    np.cumsum(np.bincount(brows, minlength=gm), out=indptr[1:])
+    # index stream stays host-side numpy: it is static (routing-independent
+    # under tracing) and the engine inspects it with numpy before the call
+    ab = BatchedBCSR(indptr=indptr,
+                     block_rows=brows.astype(np.int32),
+                     block_cols=bcols.astype(np.int32),
+                     blocks=tiles4[:, brows, bcols],
+                     shape=(B, Mp, Sp), block=(bm, bk))
+    xt_p = jnp.pad(xt, ((0, 0), (0, Sp - S), (0, 0)))
+    out = engine.shard_spmm_batched(ab, xt_p, bn=tiles["bn"],
+                                    out_dtype=xt.dtype)      # (B, Mp, d)
+    return out[:, :M].reshape(B, E, C, d).transpose(1, 0, 2, 3)
+
+
+def _combine_gather(yt: jax.Array, flat_slot: jax.Array, gate: jax.Array,
+                    keep: jax.Array, E: int, C: int):
+    """Gather each token's expert output back by its own index; dropped
+    tokens contribute zero.  yt: (B, E*C, d) -> (B, S, d)."""
+    B = yt.shape[0]
+    d = yt.shape[-1]
+    yt_pad = jnp.concatenate([yt, jnp.zeros((B, 1, d), yt.dtype)], axis=1)
+    back = jnp.take_along_axis(
+        yt_pad, jnp.minimum(flat_slot, E * C)[..., None], axis=1)
+    return back * (gate * keep).astype(back.dtype)[..., None]
+
+
+# --------------------------------------------------------------- the layer --
+
+def apply_moe(p, x, cfg: ArchConfig, *, counts: Optional[jax.Array] = None,
+              pos=None, groups: Optional[int] = None,
+              dispatch: Optional[str] = None):
+    """x: (B, S, d) -> ((B, S, d), new_counts (B, E) int32).
+
+    ``counts``/``pos`` thread the routing state for stepwise decode: pass the
+    previous call's ``new_counts`` and the absolute position of x[:, 0] and a
+    one-token step reproduces the prefill slot and drop decision bit-for-bit.
+    Training/prefill callers pass neither (fresh sequence at position 0) and
+    may discard the returned counts.
+
+    ``dispatch`` selects the backend ("gather" | "bcsr"); default is
+    ``context.MOE_DISPATCH`` then ``cfg.moe_dispatch``.
+
+    Routing is per batch row, so under dp sharding of B the cumsum stays
+    shard-local and the only cross-shard movement is the (E, B, C, d)
+    dispatch -- the EP all-to-all.  ``groups`` (or ``context.MOE_GROUPS``)
+    declares how many row groups the data axes expect; when it does not
+    divide B the dispatch buffer cannot align with the data shards and the
+    layer warns (raises under ``cfg.moe_strict_dispatch``) instead of
+    silently falling back to an unaligned layout.
     """
     from repro.parallel import context as pctx
     from repro.parallel.sharding import constrain
 
+    B, S, d = x.shape
+    E = cfg.n_experts
+
     if pctx.MOE_IMPL == "shard_map" and pctx.MESH is not None:
+        # train-only path: each (row, sequence-shard) chunk routes locally,
+        # occupancy is NOT threaded across calls, and dispatch is always the
+        # gather formulation.  A caller carrying routing state (decode) or
+        # requesting the bcsr backend would silently lose prefix stability,
+        # so that is an error in spirit -- surface it.
+        backend = dispatch or pctx.MOE_DISPATCH or cfg.moe_dispatch
+        if counts is not None or pos is not None or backend != "gather":
+            msg = ("apply_moe: the shard_map impl is train-only -- it does "
+                   "not thread routing occupancy (counts/pos) and only "
+                   "supports moe_dispatch='gather'; decode and bcsr callers "
+                   "must use the pjit impl.")
+            if cfg.moe_strict_dispatch:
+                raise ValueError(msg)
+            warnings.warn(msg, RuntimeWarning, stacklevel=2)
         from repro.models.moe_shard_map import apply_moe_shard_map
         from repro.parallel.sharding import FSDP
         dp_axes = tuple(a for a in FSDP if a in pctx.MESH.axis_names)
         dp_axes = dp_axes if len(dp_axes) > 1 else dp_axes[0]
-        return apply_moe_shard_map(p, x, cfg, pctx.MESH, dp_axes=dp_axes,
-                                   tp_axis="model")
+        out = apply_moe_shard_map(p, x, cfg, pctx.MESH, dp_axes=dp_axes,
+                                  tp_axis="model")
+        new_counts = counts if counts is not None else jnp.zeros((B, E), jnp.int32)
+        return out, new_counts
 
-    B, S, d = x.shape
-    E = cfg.n_experts
-    T = B * S
-    G = groups or pctx.MOE_GROUPS or 1
-    if T % G or (T // G) < 1:
-        G = 1
-    Tg = T // G
-    Cg = max(1, int(Tg / E * cfg.capacity_factor))
-    xt = x.reshape(G, Tg, d)
+    G = groups or pctx.MOE_GROUPS
+    if G and B % G != 0:
+        msg = (f"apply_moe: {G} dispatch group(s) requested but the batch "
+               f"dim B={B} is not divisible; the (E, B, C, d) dispatch "
+               "buffer cannot align with the data shards and falls back to "
+               "an ungrouped layout (extra resharding under pjit).")
+        if cfg.moe_strict_dispatch:
+            raise ValueError(msg)
+        warnings.warn(msg, RuntimeWarning, stacklevel=2)
 
-    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
-    probs = jax.nn.softmax(logits, axis=-1)               # (G, Tg, E)
-    gate, expert_id = jax.lax.top_k(probs, 1)             # top-1 per pool spec
-    gate, expert_id = gate[..., 0], expert_id[..., 0]     # (G, Tg)
+    pos0 = 0 if pos is None else pos
+    r = route_tokens(p["router"], x, cfg, counts=counts, pos0=pos0)
+    C = dispatch_capacity(S, cfg, pos0=pos0)
 
-    # Slot within the (group, expert) queue; overflow tokens drop (std. at
-    # scale). Cumsum is per-group => shard-local under dp sharding of G.
-    onehot = jax.nn.one_hot(expert_id, E, dtype=jnp.int32)       # (G, Tg, E)
-    pos_in_e = (jnp.cumsum(onehot, axis=1) - 1) * onehot
-    slot = pos_in_e.sum(axis=-1)                                  # (G, Tg)
-    keep = slot < Cg
-
-    # --- SU dispatch: index stream (expert*Cg + slot) per group ------------
-    flat_slot = jnp.where(keep, expert_id * Cg + slot, E * Cg)    # drop -> pad
-    inv = jnp.full((G, E * Cg + 1), Tg, jnp.int32)
-    inv = inv.at[jnp.arange(G)[:, None], flat_slot].set(
-        jnp.broadcast_to(jnp.arange(Tg, dtype=jnp.int32), (G, Tg)),
-        mode="drop")[:, : E * Cg]
-    xt_pad = jnp.concatenate([xt, jnp.zeros((G, 1, d), xt.dtype)], axis=1)
-    xe = jnp.take_along_axis(xt_pad, inv[..., None], axis=1)      # (G, E*Cg, d)
-    xe = xe.reshape(G, E, Cg, d).transpose(1, 0, 2, 3)            # (E, G, Cg, d)
+    # --- SU dispatch: index stream (expert*C + within) per row -------------
+    flat_slot = jnp.where(r.keep, r.expert_id * C + r.within, E * C)
+    backend = dispatch or pctx.MOE_DISPATCH or cfg.moe_dispatch
+    if backend == "bcsr":
+        xe = _dispatch_bcsr(x, flat_slot, E, C)
+    elif backend == "gather":
+        xe = _dispatch_gather(x, flat_slot, E, C)
+    else:
+        raise ValueError(f"unknown moe_dispatch backend {backend!r}")
     if pctx.MOE_SPEC is not None:
-        xe = constrain(xe, pctx.MOE_SPEC)                         # EP all-to-all
+        xe = constrain(xe, pctx.MOE_SPEC)                 # EP all-to-all
 
-    ye = _expert_ffn(p["experts"], xe.reshape(E, G * Cg, d),
-                     cfg.mlp_type).reshape(E, G, Cg, d)
+    ye = _expert_ffn(p["experts"], xe.reshape(E, B * C, d),
+                     cfg.mlp_type).reshape(E, B, C, d)
 
     # --- SU combine: inverse all-to-all + gather back by the same stream ---
-    # Constrain BACK to the dispatch (group-sharded) layout before the gather:
+    # Constrain BACK to the dispatch (row-sharded) layout before the gather:
     # each token's result lives on exactly one expert shard, so the reshard is
     # an all-to-all; gathering straight from the EP layout instead makes GSPMD
     # emit a full-activation all-reduce per layer (measured: 5.4 GB -> 34 MB
     # per layer on llama4-scout train_4k).
-    ye = ye.transpose(1, 0, 2, 3).reshape(G, E * Cg, d)
+    yt = ye.transpose(1, 0, 2, 3).reshape(B, E * C, d)
     if pctx.MOE_COMBINE_SPEC is not None:
-        ye = constrain(ye, pctx.MOE_COMBINE_SPEC)
-    ye_pad = jnp.concatenate([ye, jnp.zeros((G, 1, d), ye.dtype)], axis=1)
-    back = jnp.take_along_axis(
-        ye_pad, jnp.minimum(flat_slot, E * Cg)[..., None], axis=1)
-    out = back * (gate * keep).astype(back.dtype)[..., None]
+        yt = constrain(yt, pctx.MOE_COMBINE_SPEC)
+    out = _combine_gather(yt, flat_slot, r.gate, r.keep, E, C)
 
     if cfg.moe_shared_expert:
-        out = out + apply_mlp(p["shared"], xt.reshape(T, d), cfg).reshape(G, Tg, d)
-    return out.reshape(B, S, d)
+        out = out + apply_mlp(p["shared"], x.reshape(B * S, d),
+                              cfg).reshape(B, S, d)
+    return out, r.new_counts
 
 
 def load_balance_loss(logits: jax.Array, expert_id: jax.Array, E: int):

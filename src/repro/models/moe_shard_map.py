@@ -8,6 +8,13 @@ buffer, which GSPMD lowers to a full-activation f32 all-reduce per MoE layer
 capacity buffers by construction -- and ``all_to_all``'s transpose is
 ``all_to_all``, so the backward moves the same bounded bytes.
 
+Routing reuses the prefix-stable stage from ``repro.models.moe``
+(:func:`~repro.models.moe.route_tokens`) on the *local* (B_loc, S_loc)
+block, so the slot/drop law is the same per-(row, expert) prefix-cumsum law
+as the pjit path.  This impl is train-only: sequence shards route their
+local chunk from local position 0 and routing state is not threaded across
+calls (decode uses the pjit path, which carries occupancy counts).
+
 Layout inside shard_map (mesh axes dp = ("pod","data") merged, tp = "model"):
   x block: (B_loc, S_loc, d)  [B over dp, S over tp (SP)]
   experts: E split over tp; d split over dp (FSDP -> all_gather on entry,
@@ -15,41 +22,13 @@ Layout inside shard_map (mesh axes dp = ("pod","data") merged, tp = "model"):
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.config import ArchConfig
-from repro.models.layers import apply_mlp
-
-
-def _local_dispatch(xt, router, E: int, cap: int, cf: float):
-    """Route local tokens into (E, cap, d) buckets; returns (xe, combine)."""
-    T, d = xt.shape
-    logits = xt.astype(jnp.float32) @ router.astype(jnp.float32)
-    probs = jax.nn.softmax(logits, axis=-1)
-    gate, expert_id = jax.lax.top_k(probs, 1)
-    gate, expert_id = gate[:, 0], expert_id[:, 0]
-    onehot = jax.nn.one_hot(expert_id, E, dtype=jnp.int32)
-    slot = ((jnp.cumsum(onehot, axis=0) - 1) * onehot).sum(-1)
-    keep = slot < cap
-    flat = jnp.where(keep, expert_id * cap + slot, E * cap)
-    inv = jnp.full((E * cap + 1,), T, jnp.int32).at[flat].set(
-        jnp.arange(T, dtype=jnp.int32), mode="drop")[: E * cap]
-    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
-    xe = jnp.take(xt_pad, inv, axis=0).reshape(E, cap, d)
-    return xe, (flat, gate, keep)
-
-
-def _local_combine(ye, flat, gate, keep, E: int, cap: int):
-    ye_flat = ye.reshape(E * cap, -1)
-    ye_pad = jnp.concatenate(
-        [ye_flat, jnp.zeros((1, ye_flat.shape[1]), ye_flat.dtype)], axis=0)
-    back = jnp.take(ye_pad, jnp.minimum(flat, E * cap), axis=0)
-    return back * (gate * keep).astype(back.dtype)[:, None]
+from repro.models.moe import (_combine_gather, _dispatch_gather,
+                              dispatch_capacity, route_tokens)
 
 
 def apply_moe_shard_map(p, x, cfg: ArchConfig, mesh, *, dp_axes, tp_axis):
@@ -59,16 +38,17 @@ def apply_moe_shard_map(p, x, cfg: ArchConfig, mesh, *, dp_axes, tp_axis):
     assert E % tp == 0, (E, tp)
 
     def body(x_blk, router, experts, shared):
-        # x_blk: (B_loc, S_loc, d) -- local tokens
+        # x_blk: (B_loc, S_loc, d) -- local tokens, routed per local row
         Bl, Sl, d = x_blk.shape
-        T = Bl * Sl
-        xt = x_blk.reshape(T, d)
-        cap = max(1, int(T / E * cfg.capacity_factor))
-        xe, combine_state = _local_dispatch(xt, router, E, cap, cfg.capacity_factor)
+        r = route_tokens(router, x_blk, cfg)
+        cap = dispatch_capacity(Sl, cfg)
+        flat = jnp.where(r.keep, r.expert_id * cap + r.within, E * cap)
+        xe = _dispatch_gather(x_blk, flat, E, cap)       # (E, Bl, cap, d)
+        xe = xe.reshape(E, Bl * cap, d)
 
         # EP all-to-all: split the expert dim over tp peers, concat capacity.
-        # (E, cap, d) -> (E/tp, tp*cap, d): this shard now holds *its* experts'
-        # tokens from every sequence-peer. all_to_all's transpose is
+        # (E, Bl*cap, d) -> (E/tp, tp*Bl*cap, d): this shard now holds *its*
+        # experts' tokens from every sequence-peer. all_to_all's transpose is
         # all_to_all -> bounded backward traffic by construction.
         xe = jax.lax.all_to_all(xe, tp_axis, 0, 1, tiled=True)
 
@@ -87,12 +67,15 @@ def apply_moe_shard_map(p, x, cfg: ArchConfig, mesh, *, dp_axes, tp_axis):
 
         # inverse all-to-all back to the dispatch layout
         ye = jax.lax.all_to_all(ye, tp_axis, 1, 0, tiled=True)
-        out = _local_combine(ye, *combine_state, E, cap).reshape(Bl, Sl, d)
+        yt = ye.reshape(E, Bl, cap, d).transpose(1, 0, 2, 3).reshape(
+            Bl, E * cap, d)
+        out = _combine_gather(yt, flat, r.gate, r.keep, E, cap)
         if cfg.moe_shared_expert:
             sh = {k: jax.lax.all_gather(v.astype(cd), dp_axes, axis=0,
                                         tiled=True)
                   for k, v in shared.items()}
             # shared expert weights are (d, ff)/(ff, d) FSDP-sharded on dim 0
+            xt = x_blk.reshape(Bl * Sl, d)
             hh = jax.nn.silu(xt @ sh["w_gate"]) * (xt @ sh["w_up"]) \
                 if cfg.mlp_type == "swiglu" else \
                 jnp.square(jax.nn.relu(xt @ sh["w_up"]))

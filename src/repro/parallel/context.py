@@ -13,11 +13,14 @@ from typing import Optional
 from jax.sharding import PartitionSpec as P
 
 ACT_SPEC: Optional[P] = None   # residual stream (B, S, d)
-MOE_SPEC: Optional[P] = None   # dispatched expert tiles (E, G, Cg, d)
+MOE_SPEC: Optional[P] = None   # dispatched expert tiles (E, B, C, d)
 LOGIT_SPEC: Optional[P] = None  # logits (B, S, V)
-MOE_GROUPS: Optional[int] = None  # dispatch groups (= data shards)
-MOE_COMBINE_SPEC: Optional[P] = None  # post-expert tiles (G, E*Cg, d)
+MOE_GROUPS: Optional[int] = None  # dispatch row groups (= data shards);
+#   routing is per batch row, so this only *validates* that the dispatch
+#   buffer's B dim can align with the data axes (see models.moe.apply_moe)
+MOE_COMBINE_SPEC: Optional[P] = None  # post-expert tiles (B, E*C, d)
 MOE_IMPL: str = "pjit"                # "pjit" | "shard_map" (SPerf-C)
+MOE_DISPATCH: Optional[str] = None    # "gather" | "bcsr" | None (= cfg field)
 MESH = None                           # concrete mesh for shard_map paths
 
 
@@ -25,14 +28,17 @@ MESH = None                           # concrete mesh for shard_map paths
 def activation_specs(act: Optional[P] = None, moe: Optional[P] = None,
                      logit: Optional[P] = None, moe_groups: Optional[int] = None,
                      moe_combine: Optional[P] = None, moe_impl: str = "pjit",
-                     mesh=None):
-    global ACT_SPEC, MOE_SPEC, LOGIT_SPEC, MOE_GROUPS, MOE_COMBINE_SPEC,         MOE_IMPL, MESH
+                     moe_dispatch: Optional[str] = None, mesh=None):
+    global ACT_SPEC, MOE_SPEC, LOGIT_SPEC, MOE_GROUPS, MOE_COMBINE_SPEC, \
+        MOE_IMPL, MOE_DISPATCH, MESH
     prev = (ACT_SPEC, MOE_SPEC, LOGIT_SPEC, MOE_GROUPS, MOE_COMBINE_SPEC,
-            MOE_IMPL, MESH)
-    ACT_SPEC, MOE_SPEC, LOGIT_SPEC, MOE_GROUPS, MOE_COMBINE_SPEC,         MOE_IMPL, MESH = (act, moe, logit, moe_groups, moe_combine,
-                          moe_impl, mesh)
+            MOE_IMPL, MOE_DISPATCH, MESH)
+    ACT_SPEC, MOE_SPEC, LOGIT_SPEC, MOE_GROUPS, MOE_COMBINE_SPEC, \
+        MOE_IMPL, MOE_DISPATCH, MESH = (act, moe, logit, moe_groups,
+                                        moe_combine, moe_impl, moe_dispatch,
+                                        mesh)
     try:
         yield
     finally:
         (ACT_SPEC, MOE_SPEC, LOGIT_SPEC, MOE_GROUPS, MOE_COMBINE_SPEC,
-         MOE_IMPL, MESH) = prev
+         MOE_IMPL, MOE_DISPATCH, MESH) = prev

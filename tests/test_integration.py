@@ -47,7 +47,7 @@ def test_model_forward_kernel_impl_matches_chunked():
 
 
 @pytest.mark.parametrize("name", ["qwen2-1.5b", "zamba2-1.2b", "rwkv6-7b",
-                                  "gemma3-12b"])
+                                  "gemma3-12b", "llama4-scout-17b-a16e"])
 def test_prefill_then_decode_matches_full_forward(name):
     """prefill(prompt) -> decode_step xN must equal teacher-forced forward."""
     cfg = get_smoke(name)

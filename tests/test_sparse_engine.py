@@ -34,6 +34,24 @@ def test_mesh_has_virtual_devices():
     assert jax.device_count() >= 2
 
 
+def test_ensure_virtual_devices_detects_late_call():
+    """Once the backend is initialized the XLA_FLAGS override is inert:
+    asking for more devices than exist must warn (raise under strict),
+    not silently leave sharded tests on one device.  Asking for what we
+    already have stays silent."""
+    import warnings
+
+    assert jax.local_device_count() >= 2  # backend is up (conftest: 4)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        engine.ensure_virtual_devices(jax.local_device_count())
+    with pytest.warns(RuntimeWarning, match="already initialized"):
+        engine.ensure_virtual_devices(jax.local_device_count() + 64)
+    with pytest.raises(RuntimeError, match="already initialized"):
+        engine.ensure_virtual_devices(jax.local_device_count() + 64,
+                                      strict=True)
+
+
 # ---------------------------------------------------------------------------
 # SpMM: N-partitioned
 # ---------------------------------------------------------------------------
