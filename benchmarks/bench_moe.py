@@ -76,9 +76,11 @@ def run() -> list:
     tiles = tuning.moe_dispatch_tiles(DB, jnp.float32)
     # pin the CPU interpret-mode row to the tiles this comparison actually
     # ran (explicit platform: never clobber the TPU row with a bn that was
-    # shape-clamped to this benchmark's small d_model)
+    # shape-clamped to this benchmark's small d_model); keep the bucket
+    # floor -- register replaces the whole row
     tuning.register("moe_dispatch", jnp.float32,
-                    {"block": tiles["block"], "bn": tiles["bn"]},
+                    {"block": tiles["block"], "bn": tiles["bn"],
+                     "min_bucket": tiles["min_bucket"]},
                     platform="cpu")
     gth = jax.jit(lambda p, x: moe_mod.apply_moe(p, x, cfg_b,
                                                  dispatch="gather")[0])
@@ -88,6 +90,22 @@ def run() -> list:
     ref = gth(params_b, xb_in)
     got = moe_mod.apply_moe(params_b, xb_in, cfg_b, dispatch="bcsr")[0]
     assert float(jnp.abs(ref - got).max()) == 0.0, "backends diverge"
+
+    # Two-phase route-then-compile: the *jit* gather-vs-bcsr comparison the
+    # serving loop actually runs.  Phase 1 (host routing + stream
+    # compaction) is timed eagerly; phase 2 (dispatch+FFN+combine) is the
+    # jit-compiled step on the bucketed stream.  The stream-size row is the
+    # point: bucketed nnzb vs the full grid the single-phase jit fallback
+    # pays (`moe/backend_bcsr_engine` above routes through that fallback
+    # only when traced; here it ran eagerly).
+    plan, info = moe_mod.route_moe(params_b, xb_in, cfg_b, dispatch="bcsr")
+    t_route = time_fn(
+        lambda: moe_mod.route_moe(params_b, xb_in, cfg_b,
+                                  dispatch="bcsr")[0].flat_slot)
+    t_exec = time_fn(
+        lambda: moe_mod.execute_moe_jit(params_b, xb_in, plan, cfg_b)[0])
+    got2p = moe_mod.execute_moe_jit(params_b, xb_in, plan, cfg_b)[0]
+    assert float(jnp.abs(ref - got2p).max()) == 0.0, "two-phase diverges"
 
     # BCSR-on-kernel: dispatch matrix (T x T permutation-ish) as block-sparse
     sel = rng.permutation(T)[: T // 4]
@@ -121,6 +139,17 @@ def run() -> list:
                     f"tokens={TB};experts={E};d={DB};"
                     f"block={tiles['block']};bn={tiles['bn']};"
                     f"gather_vs_bcsr={t_bcsr / t_gth:.2f}x"))
+    rows.append(row("moe/backend_bcsr_two_phase(jit)",
+                    (t_route + t_exec) * 1e6,
+                    f"tokens={TB};experts={E};d={DB};"
+                    f"route_us={t_route*1e6:.1f};exec_us={t_exec*1e6:.1f};"
+                    f"nnzb_stream={info['nnzb_stream']};"
+                    f"nnzb_routed={info['nnzb_routed']};"
+                    f"grid_nnzb={info['grid_nnzb']};"
+                    f"stream_reduction="
+                    f"{info['grid_nnzb'] / info['nnzb_stream']:.1f}x;"
+                    f"jit_gather_vs_two_phase="
+                    f"{(t_route + t_exec) / t_gth:.2f}x"))
     rows.append(row("moe/bcsr_kernel_dispatch(interp)", t_k * 1e6,
                     f"useful_flops={useful};block_density={a.density():.4f}"))
     rows.append(row("moe/bcsr_batched_dispatch(interp)", t_bat * 1e6,

@@ -6,9 +6,10 @@ Two jobs, both of which must happen before any test module imports jax:
    sparse-engine tests exercise real ``shard_map`` partitioning on a plain
    CPU host.  Harmless for single-device tests: jit still places
    un-sharded computations on device 0.
-2. Tier the suite: ``slow`` (integration / model-smoke) tests are
-   deselected by default so the tier-1 gate (``pytest -x -q``) finishes in
-   minutes; run them with ``--run-slow`` (or select explicitly with ``-m``).
+2. Tier the suite: ``slow`` (integration / model-smoke) and ``serve``
+   (full serving-loop smoke) tests are deselected by default so the tier-1
+   gate (``pytest -x -q``) finishes in minutes; run them with
+   ``--run-slow`` / ``--run-serve`` (or select explicitly with ``-m``).
    ``tpu`` tests are skipped unless a TPU backend is attached.
 """
 import os
@@ -28,6 +29,9 @@ def pytest_addoption(parser):
     parser.addoption(
         "--run-slow", action="store_true", default=False,
         help="run tests marked slow (integration / model smoke)")
+    parser.addoption(
+        "--run-serve", action="store_true", default=False,
+        help="run tests marked serve (full serving-loop smoke)")
 
 
 def pytest_collection_modifyitems(config, items):
@@ -45,11 +49,16 @@ def pytest_collection_modifyitems(config, items):
     # not report a green 0-test run).
     named_explicitly = any(
         arg.endswith(".py") or "::" in arg for arg in config.args)
-    if (config.getoption("--run-slow") or config.getoption("-m")
-            or named_explicitly):
+    if config.getoption("-m") or named_explicitly:
         return
-    selected = [i for i in items if "slow" not in i.keywords]
-    deselected = [i for i in items if "slow" in i.keywords]
+    # slow and serve are independently opt-in tiers
+    skip_marks = {m for m, opt in (("slow", "--run-slow"),
+                                   ("serve", "--run-serve"))
+                  if not config.getoption(opt)}
+    selected = [i for i in items
+                if not any(m in i.keywords for m in skip_marks)]
+    deselected = [i for i in items
+                  if any(m in i.keywords for m in skip_marks)]
     if deselected:
         config.hook.pytest_deselected(items=deselected)
         items[:] = selected

@@ -146,6 +146,51 @@ class BatchedBCSR:
                     block_cols=self.block_cols, blocks=self.blocks[i],
                     shape=self.shape[1:], block=self.block)
 
+    def with_capacity(self, nnzb_cap: int) -> "BatchedBCSR":
+        """Pad the shared index stream to exactly ``nnzb_cap`` entries.
+
+        Pad entries repeat the *last* stream entry's (row, col) coordinates
+        with all-zero blocks, so the stream stays (row, col)-sorted, every
+        block-row that appeared still appears, and the padded product is
+        bit-identical (zero blocks accumulate zero).  This is how a
+        data-dependent routed stream is snapped to a static *bucket* size:
+        a jit-compiled consumer retraces per distinct capacity, never per
+        raw nonzero count (see ``repro.kernels.engine.stream_bucket``).
+
+        Host-side: the index stream must be concrete (it defines static
+        geometry), so this cannot be called on traced containers.
+        """
+        nnzb = self.nnzb
+        if nnzb_cap < nnzb:
+            raise ValueError(
+                f"with_capacity({nnzb_cap}): stream already holds {nnzb} "
+                "blocks; capacity can only grow")
+        if nnzb_cap == nnzb:
+            return self
+        if nnzb == 0:
+            raise ValueError("with_capacity: cannot pad an empty stream "
+                             "(no coordinates to repeat)")
+        if isinstance(self.block_rows, jax.core.Tracer):
+            raise TypeError(
+                "with_capacity needs a concrete index stream (it fixes the "
+                "static bucket geometry); build the plan eagerly, outside jit")
+        pad = nnzb_cap - nnzb
+        rows = np.asarray(self.block_rows)
+        cols = np.asarray(self.block_cols)
+        last_r = int(rows[-1])
+        rows = np.concatenate([rows, np.full(pad, last_r, np.int32)])
+        cols = np.concatenate([cols, np.full(pad, int(cols[-1]), np.int32)])
+        indptr = np.asarray(self.indptr).copy()
+        indptr[last_r + 1:] += pad
+        blocks = jnp.concatenate(
+            [self.blocks,
+             jnp.zeros((self.batch, pad) + tuple(self.block),
+                       self.blocks.dtype)], axis=1)
+        return BatchedBCSR(indptr=jnp.asarray(indptr),
+                           block_rows=jnp.asarray(rows),
+                           block_cols=jnp.asarray(cols),
+                           blocks=blocks, shape=self.shape, block=self.block)
+
     def todense(self) -> jax.Array:
         bm, bn = self.block
         gm, gn = self.grid_shape

@@ -43,6 +43,34 @@ from repro.kernels.spmm.kernel import spmm_bcsr
 from repro.kernels.spmspm.kernel import spmspm_ell
 
 
+_PROBE_MISSING = object()
+
+
+def backend_initialized() -> Optional[bool]:
+    """Best-effort, side-effect-free probe: has a jax backend initialized?
+
+    Returns True/False when one of the known (private) probe points exists,
+    or ``None`` when a jax upgrade has moved them all -- callers must treat
+    ``None`` as "unknown" and fall back to public APIs (which may themselves
+    initialize the backend), never crash.  There is deliberately no public
+    side-effect-free probe in jax, hence the version-tolerant ladder."""
+    import importlib
+    for mod_name, attr in (("jax._src.xla_bridge", "_backends"),
+                           ("jax.lib.xla_bridge", "_backends")):
+        try:
+            mod = importlib.import_module(mod_name)
+        except Exception:
+            continue
+        probe = getattr(mod, attr, _PROBE_MISSING)
+        if probe is _PROBE_MISSING:
+            continue
+        try:
+            return bool(probe)
+        except Exception:
+            return None
+    return None
+
+
 def ensure_virtual_devices(n: int = 4, *, strict: bool = False) -> None:
     """Force >= ``n`` virtual CPU devices (tests / CLI demos on one host).
 
@@ -56,12 +84,14 @@ def ensure_virtual_devices(n: int = 4, *, strict: bool = False) -> None:
     if "xla_force_host_platform_device_count" not in flags:
         os.environ["XLA_FLAGS"] = (
             f"{flags} --xla_force_host_platform_device_count={n}".strip())
-    initialized = False
-    try:  # private, but the public API offers no side-effect-free probe
-        from jax._src import xla_bridge as _xb
-        initialized = bool(getattr(_xb, "_backends", None))
-    except Exception:
-        initialized = False
+    initialized = backend_initialized()
+    if initialized is None:
+        # Probe points moved (jax upgrade): fall back to the public device
+        # count.  This *does* initialize the backend, but the flag above is
+        # already exported, so a fresh init honors it and the count check
+        # below stays accurate; a short count can only mean the backend
+        # predates this call.
+        initialized = True
     if initialized and jax.local_device_count() < n:
         msg = (f"ensure_virtual_devices({n}): the JAX backend already "
                f"initialized with {jax.local_device_count()} device(s); the "
@@ -78,16 +108,48 @@ def _interpret_default(interpret: Optional[bool]) -> bool:
     return (not tuning.on_tpu()) if interpret is None else interpret
 
 
+_MESH_INTERN: dict = {}
+
+
+def _intern_mesh(mesh: Mesh) -> Mesh:
+    """Canonicalize equal meshes to one object so the lru-cached sharded
+    functions key on *mesh value semantics* -- (device assignment, axis
+    names) -- not on whatever ``Mesh.__hash__`` does on the installed jax.
+    Step builders recreate meshes freely; the caches must not depend on a
+    version-specific Mesh identity/equality contract to stay hot.  The
+    intern table is bounded by the number of distinct topologies a process
+    ever builds (a handful)."""
+    key = (tuple(mesh.devices.flat), mesh.devices.shape, mesh.axis_names)
+    return _MESH_INTERN.setdefault(key, mesh)
+
+
 def auto_mesh(mesh: Optional[Mesh] = None) -> Tuple[Mesh, str]:
-    """Resolve (mesh, shard-axis): arg > parallel-context mesh > all devices."""
+    """Resolve (mesh, shard-axis): arg > parallel-context mesh > all devices.
+
+    The resolved mesh is interned (see :func:`_intern_mesh`), so two equal
+    meshes resolve to the same object and downstream lru caches hit."""
     if mesh is None:
         from repro.parallel import context as pctx
         mesh = pctx.MESH
     if mesh is None:
         devs = jax.devices()
         mesh = jax.make_mesh((len(devs),), ("data",))
+    mesh = _intern_mesh(mesh)
     axis = "data" if "data" in mesh.axis_names else mesh.axis_names[0]
     return mesh, axis
+
+
+def stream_bucket(nnzb: int, *, minimum: int = 8) -> int:
+    """Snap a routed nonzero-block count to its power-of-two bucket.
+
+    Two-phase serving (route on host, execute under jit) pads the index
+    stream to ``stream_bucket(nnzb)`` entries before handing it to a
+    compiled step, so the compile cache is keyed on the bucket, not the raw
+    data-dependent count: recompiles are bounded by ``log2(grid)`` buckets
+    while the stream stays within ``max(2 * nnzb, minimum)`` -- the floor
+    dominates on tiny (decode-step) streams, the 2x law everywhere else."""
+    n = max(int(nnzb), int(minimum), 1)
+    return 1 << (n - 1).bit_length()
 
 
 def _pad_dim(x: jax.Array, dim: int, multiple: int, value=0) -> jax.Array:
@@ -161,19 +223,25 @@ def _sharded_spmm_batched_fn(mesh: Mesh, axis: str, gm: int, bn: int,
     ))
 
 
-def shard_spmm_batched(a: BatchedBCSR, dense: jax.Array, *,
-                       mesh: Optional[Mesh] = None, bn: Optional[int] = None,
-                       out_dtype=jnp.float32,
-                       interpret: Optional[bool] = None) -> jax.Array:
-    """C[b] = A[b] @ dense[b], batch dim partitioned across the mesh.
+def shard_spmm_batched_stream(a: BatchedBCSR, dense: jax.Array, *,
+                              mesh: Optional[Mesh] = None,
+                              bn: Optional[int] = None,
+                              out_dtype=jnp.float32,
+                              interpret: Optional[bool] = None) -> jax.Array:
+    """Trace-safe batched SpMM on a *pre-normalized* stream.
 
-    ``dense``: (B, K, N) or (K, N) broadcast. The batch is zero-padded up to
-    a device multiple (zero blocks x zero dense = zero work rows) and the
-    pad stripped after."""
+    Contract: every block-row of ``a`` already appears in the stream (e.g.
+    the caller ran :func:`repro.kernels.spmm.ops.pad_empty_rows` or built
+    the stream with row coverage, as ``BatchedBCSR.with_capacity`` padding
+    preserves).  Unlike :func:`shard_spmm_batched` this never inspects the
+    index stream host-side, so it can be called *under jit* with the stream
+    arrays as traced arguments -- the compile cache then keys on the stream
+    *shape* (a bucketed capacity), never on the concrete index values.  This
+    is the phase-2 entry point of the two-phase route-then-compile serving
+    loop (see models.moe.execute_moe)."""
     mesh, axis = auto_mesh(mesh)
     n_dev = mesh.shape[axis]
     interpret = _interpret_default(interpret)
-    a = spmm_ops.pad_empty_rows(a)
     B = a.batch
     if dense.ndim == 2:
         dense = jnp.broadcast_to(dense, (B,) + dense.shape)
@@ -186,8 +254,42 @@ def shard_spmm_batched(a: BatchedBCSR, dense: jax.Array, *,
     gm, _ = a.grid_shape
     fn = _sharded_spmm_batched_fn(mesh, axis, gm, bn,
                                   jnp.dtype(out_dtype).name, interpret)
-    out = fn(a.block_rows, a.block_cols, blocks, dense)
+    out = fn(jnp.asarray(a.block_rows), jnp.asarray(a.block_cols), blocks,
+             dense)
     return out[:B, :, :N]
+
+
+def shard_spmm_batched(a: BatchedBCSR, dense: jax.Array, *,
+                       mesh: Optional[Mesh] = None, bn: Optional[int] = None,
+                       out_dtype=jnp.float32,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """C[b] = A[b] @ dense[b], batch dim partitioned across the mesh.
+
+    ``dense``: (B, K, N) or (K, N) broadcast. The batch is zero-padded up to
+    a device multiple (zero blocks x zero dense = zero work rows) and the
+    pad stripped after.  Host-side entry: the index stream is inspected with
+    numpy (empty-row padding), so call it eagerly; under jit use
+    :func:`shard_spmm_batched_stream` on a pre-normalized stream."""
+    a = spmm_ops.pad_empty_rows(a)
+    return shard_spmm_batched_stream(a, dense, mesh=mesh, bn=bn,
+                                     out_dtype=out_dtype, interpret=interpret)
+
+
+def shard_spmm_batched_bucketed(a: BatchedBCSR, dense: jax.Array, *,
+                                mesh: Optional[Mesh] = None,
+                                bn: Optional[int] = None,
+                                min_bucket: int = 8,
+                                out_dtype=jnp.float32,
+                                interpret: Optional[bool] = None
+                                ) -> jax.Array:
+    """Like :func:`shard_spmm_batched`, but the stream is padded up to its
+    power-of-two bucket (:func:`stream_bucket`) before the call, so a
+    sequence of calls with *varying* nnzb hits a bounded set of compiled
+    programs (one per bucket) instead of one per count."""
+    a = spmm_ops.pad_empty_rows(a)
+    a = a.with_capacity(stream_bucket(a.nnzb, minimum=min_bucket))
+    return shard_spmm_batched_stream(a, dense, mesh=mesh, bn=bn,
+                                     out_dtype=out_dtype, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -76,8 +76,21 @@ def _spmm_batched_jit(block_rows, block_cols, blocks, dense, *, n_block_rows,
 
 
 def _resolve_bn(bn, n, dtype, bk) -> int:
+    """Resolve the dense-operand N-tile.
+
+    An explicit ``bn=`` is honored exactly -- it must be a positive multiple
+    of the 128-lane width or this raises (the old behavior silently clamped
+    via ``min(bn, max(128, n))``, so ``bn=100`` produced an unaligned tile
+    and ``bn=256`` with small N was silently rewritten).  ``bn=None``
+    consults the autotune table, which applies the shape/VMEM clamp."""
     if bn is not None:
-        return min(bn, max(128, n))
+        bn = int(bn)
+        if bn < tuning.LANE or bn % tuning.LANE:
+            raise ValueError(
+                f"explicit bn={bn} is not a positive multiple of the "
+                f"{tuning.LANE}-lane tile width; pass a {tuning.LANE}-aligned"
+                " override or bn=None to use the autotune table")
+        return bn
     return tuning.spmm_bn(n, dtype, bk=bk)
 
 

@@ -84,13 +84,24 @@ _TABLE: Dict[Tuple[str, str, str], Dict[str, Any]] = {
     # MoE dispatch-as-SpMM (models.moe "bcsr" backend): ``block`` tiles the
     # 0/1 (slot, token) dispatch matrix -- small square blocks track the
     # one-nonzero-per-column structure; ``bn`` is the d_model N-tile of the
-    # token operand streamed through the SpMM kernel.
-    ("moe_dispatch", "f32", "tpu"): {"block": (8, 8), "bn": 256},
-    ("moe_dispatch", "bf16", "tpu"): {"block": (8, 8), "bn": 512},
-    ("moe_dispatch", "fp8", "tpu"): {"block": (8, 8), "bn": 512},
-    ("moe_dispatch", "f32", "cpu"): {"block": (8, 8), "bn": 128},
-    ("moe_dispatch", "bf16", "cpu"): {"block": (8, 8), "bn": 128},
-    ("moe_dispatch", "fp8", "cpu"): {"block": (8, 8), "bn": 128},
+    # token operand streamed through the SpMM kernel.  ``min_bucket`` is the
+    # floor of the power-of-two nnzb bucket the two-phase serving loop pads
+    # routed index streams to (engine.stream_bucket): larger floors mean
+    # fewer phase-2 recompiles at the cost of more zero-block stream work,
+    # so the TPU row (compiles are expensive, streams are cheap) sits
+    # higher than the CPU/interpret row.
+    ("moe_dispatch", "f32", "tpu"): {"block": (8, 8), "bn": 256,
+                                     "min_bucket": 32},
+    ("moe_dispatch", "bf16", "tpu"): {"block": (8, 8), "bn": 512,
+                                      "min_bucket": 32},
+    ("moe_dispatch", "fp8", "tpu"): {"block": (8, 8), "bn": 512,
+                                     "min_bucket": 32},
+    ("moe_dispatch", "f32", "cpu"): {"block": (8, 8), "bn": 128,
+                                     "min_bucket": 8},
+    ("moe_dispatch", "bf16", "cpu"): {"block": (8, 8), "bn": 128,
+                                      "min_bucket": 8},
+    ("moe_dispatch", "fp8", "cpu"): {"block": (8, 8), "bn": 128,
+                                     "min_bucket": 8},
     # Stencil: per-ndim halo tiles; minor dim pinned to the 128 lane width.
     ("stencil2d", "f32", "tpu"): {"tile": (256, 256)},
     ("stencil2d", "bf16", "tpu"): {"tile": (256, 512)},
@@ -158,13 +169,16 @@ def spmspm_tiles(r: int, c: int, la: int, lb: int, dtype=jnp.float32
 
 
 def moe_dispatch_tiles(d_model: int, dtype=jnp.float32) -> Dict[str, Any]:
-    """{"block": (bm, bk), "bn": int} for the MoE dispatch-as-SpMM path;
-    ``bn`` (the d_model N-tile of the token operand) gets the same
-    shape/VMEM clamp as :func:`spmm_bn`."""
+    """{"block": (bm, bk), "bn": int, "min_bucket": int} for the MoE
+    dispatch-as-SpMM path; ``bn`` (the d_model N-tile of the token operand)
+    gets the same shape/VMEM clamp as :func:`spmm_bn`; ``min_bucket`` feeds
+    ``engine.stream_bucket`` when the routed stream is bucketed for the
+    two-phase serving loop (rows registered without it fall back to 8)."""
     row = _row("moe_dispatch", dtype)
     bm, bk = row["block"]
     return {"block": (int(bm), int(bk)),
-            "bn": _clamp_bn(int(row["bn"]), d_model, dtype, bk)}
+            "bn": _clamp_bn(int(row["bn"]), d_model, dtype, bk),
+            "min_bucket": int(row.get("min_bucket", 8))}
 
 
 def stencil_tile(interior: Tuple[int, ...], dtype=jnp.float32) -> Tuple[int, ...]:

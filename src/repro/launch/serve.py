@@ -1,13 +1,42 @@
-"""Serving launcher: batched prefill + greedy decode loop with KV caches.
+"""Serving launcher: a reusable two-phase route-then-compile serving loop.
+
+:class:`ServeLoop` drives prefill -> [route -> execute] -> decode with
+per-step stats.  Two modes:
+
+* **fused** (default for gather dispatch) -- the whole one-token decode step
+  is one jit-compiled program (`model.decode_step`), the classic serving
+  loop.  This is also the mode the old smoke loop ran; greedy (temperature
+  0) decoding is token-for-token identical to it.  (With temperature > 0
+  the loops differ at the *first* generated token: the old loop always
+  argmaxed it, ServeLoop samples every generated token uniformly.)
+* **two-phase** (default when the arch has MoE layers and the "bcsr"
+  dispatch backend is selected) -- each decode step runs layer by layer
+  (`model.decode_step_layered`); at every attn+moe layer the loop *routes on
+  host* (``moe.route_moe``: compacts the dispatch matrix to its union
+  nonzero-block stream, padded to a power-of-two nnzb bucket) and then calls
+  the jit-compiled expert/combine phase (``moe.execute_moe_jit``) on that
+  static-bucketed stream.  Under the old single-phase loop, tracing forced
+  the bcsr stream back to the full ``E*C x T`` grid -- dense work through
+  the sparse engine; two-phase keeps the streamed blocks proportional to
+  what actually routed while recompiles stay bounded by the bucket count
+  (see tests/README.md "two-phase serving contract").
+
+All timings block on device results (``jax.block_until_ready``) before
+reading the clock -- async dispatch otherwise makes tok/s meaningless.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --smoke \
       --batch 4 --prompt-len 32 --gen 32
+  PYTHONPATH=src python -m repro.launch.serve --arch llama4-scout-17b-a16e \
+      --smoke --dispatch bcsr --gen 16
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
+import dataclasses
 import time
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +44,193 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke
 from repro.models import model as M
+from repro.models import moe
+from repro.parallel import context as pctx
+
+
+@dataclasses.dataclass
+class StepStat:
+    """One timed phase of the loop; ``extra`` carries phase-specific detail
+    (e.g. the route phase's nnzb stream accounting)."""
+    phase: str          # prefill | route | execute | decode | sample
+    step: int           # decode step index (-1 for prefill)
+    seconds: float
+    tokens: int = 0
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class ServeLoop:
+    """Batched greedy/temperature serving loop with KV caches.
+
+    Parameters
+    ----------
+    params, cfg : the model.
+    max_seq : static decode-cache capacity (prompt + generation).
+    dispatch : MoE dispatch backend override ("gather" | "bcsr");
+        default is the config's ``moe_dispatch`` field.
+    two_phase : force the route-then-compile decode path on/off; default
+        (None) enables it exactly when the arch has attn+moe layers and the
+        backend is "bcsr" -- the combination where single-phase jit degrades
+        to full-grid streams.
+    temperature : 0 = greedy argmax, > 0 = categorical sampling.
+    """
+
+    def __init__(self, params, cfg, *, max_seq: int,
+                 dispatch: Optional[str] = None,
+                 two_phase: Optional[bool] = None,
+                 temperature: float = 0.0, sample_seed: int = 3):
+        self.params, self.cfg, self.max_seq = params, cfg, max_seq
+        self.backend = dispatch or cfg.moe_dispatch
+        has_moe = any(k == "attn+moe" for k in cfg.block_unit)
+        self.two_phase = ((self.backend == "bcsr" and has_moe)
+                          if two_phase is None else two_phase)
+        self.temperature = temperature
+        self.stats: List[StepStat] = []
+        self._exec_keys: set = set()   # distinct phase-2 compile signatures
+        self._sample_key = jax.random.PRNGKey(sample_seed)
+        self._decode_fused = jax.jit(
+            lambda p, c, pos, tok: M.decode_step(p, cfg, c, pos, tok))
+        self.cache = None
+        self.pos: Optional[int] = None
+        self.generated: List[jax.Array] = []
+
+    # ------------------------------------------------------------- phases --
+
+    @contextlib.contextmanager
+    def _dispatch_ctx(self):
+        """Trace-time backend override for the fused (in-jit) paths.
+
+        Touches ONLY ``MOE_DISPATCH`` -- an ambient ``activation_specs``
+        context (mesh, EP/combine layout constraints, dispatch groups) must
+        survive into the trace, so this cannot re-enter that manager (which
+        resets every global it does not receive)."""
+        prev = pctx.MOE_DISPATCH
+        pctx.MOE_DISPATCH = self.backend
+        try:
+            yield
+        finally:
+            pctx.MOE_DISPATCH = prev
+
+    def prefill(self, prompts: jax.Array,
+                embeddings: Optional[jax.Array] = None) -> jax.Array:
+        """Run the prompt through the model, fill the decode cache, and
+        emit the first generated token (B, 1)."""
+        t0 = time.monotonic()
+        with self._dispatch_ctx():
+            logits, cache, pos = M.prefill(self.params, prompts, self.cfg,
+                                           max_seq=self.max_seq,
+                                           embeddings=embeddings)
+        logits, cache = jax.block_until_ready((logits, cache))
+        self.stats.append(StepStat(
+            "prefill", -1, time.monotonic() - t0,
+            tokens=int(np.prod(prompts.shape))))
+        self.cache, self.pos = cache, int(pos)
+        nxt = self._sample(logits[:, -1])
+        self.generated = [nxt]
+        return nxt
+
+    def _sample(self, last_logits: jax.Array) -> jax.Array:
+        lg = last_logits[:, : self.cfg.vocab_size]
+        if self.temperature > 0:
+            self._sample_key, k = jax.random.split(self._sample_key)
+            nxt = jax.random.categorical(k, lg / self.temperature)
+        else:
+            nxt = jnp.argmax(lg, axis=-1)
+        return nxt[:, None].astype(jnp.int32)
+
+    def _moe_two_phase(self, p_ffn, h, cfg, counts=None, pos=None):
+        """The route -> execute stage injected at every attn+moe layer."""
+        t0 = time.monotonic()
+        h = jax.block_until_ready(h)
+        plan, info = moe.route_moe(p_ffn, h, cfg, counts=counts, pos=pos,
+                                   dispatch=self.backend)
+        step = len(self.generated) - 1
+        self.stats.append(StepStat("route", step, time.monotonic() - t0,
+                                   tokens=h.shape[0] * h.shape[1],
+                                   extra=dict(info)))
+        sig = (plan.capacity, plan.backend, tuple(h.shape),
+               None if plan.stream is None
+               else (plan.stream.nnzb,) + tuple(plan.stream.shape))
+        self._exec_keys.add(sig)
+        t0 = time.monotonic()
+        out, new_counts = moe.execute_moe_jit(p_ffn, h, plan, cfg)
+        out = jax.block_until_ready(out)
+        self.stats.append(StepStat(
+            "execute", step, time.monotonic() - t0,
+            tokens=h.shape[0] * h.shape[1],
+            extra={"nnzb_stream": info.get("nnzb_stream"),
+                   "compile_signatures": len(self._exec_keys)}))
+        return out, new_counts
+
+    def decode_step(self) -> jax.Array:
+        """Generate one token for every sequence in the batch."""
+        if self.cache is None:
+            raise RuntimeError("decode_step before prefill")
+        step = len(self.generated) - 1
+        pos = self.pos + step
+        tok = self.generated[-1]
+        t0 = time.monotonic()
+        if self.two_phase:
+            logits, self.cache = M.decode_step_layered(
+                self.params, self.cfg, self.cache, pos, tok,
+                moe_fn=self._moe_two_phase)
+        else:
+            with self._dispatch_ctx():
+                logits, self.cache = self._decode_fused(
+                    self.params, self.cache, jnp.asarray(pos, jnp.int32),
+                    tok)
+        logits = jax.block_until_ready(logits)
+        self.stats.append(StepStat("decode", step, time.monotonic() - t0,
+                                   tokens=tok.shape[0]))
+        nxt = self._sample(logits[:, -1])
+        self.generated.append(nxt)
+        return nxt
+
+    def decode(self, n: int):
+        for _ in range(n):
+            self.decode_step()
+
+    # -------------------------------------------------------------- drive --
+
+    def run(self, prompts: jax.Array, gen: int,
+            embeddings: Optional[jax.Array] = None) -> np.ndarray:
+        """prefill + (gen - 1) decode steps; returns (B, gen) token ids."""
+        self.stats.clear()
+        self._exec_keys.clear()
+        self.prefill(prompts, embeddings=embeddings)
+        self.decode(gen - 1)
+        return np.asarray(jnp.concatenate(self.generated, axis=1))
+
+    def summary(self) -> Dict[str, Any]:
+        """Aggregate per-phase seconds / counts for the last ``run``.
+
+        Note the phases are NOT disjoint in two-phase mode: each "decode"
+        step stat times the whole layered step, *inclusive* of the
+        "route" / "execute" layer calls made inside it (those entries
+        break the step down; do not sum them with "decode")."""
+        out: Dict[str, Any] = {}
+        for phase in ("prefill", "route", "execute", "decode"):
+            ss = [s for s in self.stats if s.phase == phase]
+            if ss:
+                out[phase] = {"seconds": sum(s.seconds for s in ss),
+                              "calls": len(ss)}
+        dec = out.get("decode")
+        if dec and dec["seconds"] > 0:
+            batch = self.generated[0].shape[0] if self.generated else 0
+            out["decode"]["tok_per_s"] = batch * dec["calls"] / dec["seconds"]
+        if self.two_phase:
+            routes = [s for s in self.stats if s.phase == "route"
+                      and "nnzb_stream" in s.extra]
+            if routes:
+                out["stream"] = {
+                    "nnzb_stream_mean": float(np.mean(
+                        [s.extra["nnzb_stream"] for s in routes])),
+                    "nnzb_routed_mean": float(np.mean(
+                        [s.extra["nnzb_routed"] for s in routes])),
+                    "grid_nnzb": routes[-1].extra["grid_nnzb"],
+                }
+            out["compile_signatures"] = len(self._exec_keys)
+        return out
 
 
 def main():
@@ -25,6 +241,12 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--dispatch", choices=["config", "gather", "bcsr"],
+                    default="config",
+                    help="MoE dispatch backend (config = the arch's field)")
+    ap.add_argument("--two-phase", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="route-then-compile decode (auto = when moe+bcsr)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -42,34 +264,30 @@ def main():
             jax.random.PRNGKey(2),
             (args.batch, cfg.frontend_tokens, cfg.d_model))
 
-    t0 = time.monotonic()
-    logits, cache, pos = M.prefill(params, prompts, cfg, max_seq=max_seq,
-                                   embeddings=emb)
-    nxt = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)[:, None].astype(jnp.int32)
-    t_prefill = time.monotonic() - t0
+    loop = ServeLoop(
+        params, cfg, max_seq=max_seq,
+        dispatch=None if args.dispatch == "config" else args.dispatch,
+        two_phase=None if args.two_phase == "auto" else args.two_phase == "on",
+        temperature=args.temperature)
+    gen = loop.run(prompts, args.gen, embeddings=emb)
+    s = loop.summary()
 
-    decode = jax.jit(
-        lambda p, c, pos, tok: M.decode_step(p, cfg, c, pos, tok))
-    out_tokens = [nxt]
-    t0 = time.monotonic()
-    sample_key = jax.random.PRNGKey(3)
-    for i in range(args.gen - 1):
-        logits, cache = decode(params, cache, pos + i, nxt)
-        lg = logits[:, -1, :cfg.vocab_size]
-        if args.temperature > 0:
-            sample_key, k = jax.random.split(sample_key)
-            nxt = jax.random.categorical(
-                k, lg / args.temperature)[:, None].astype(jnp.int32)
-        else:
-            nxt = jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
-        out_tokens.append(nxt)
-    t_decode = time.monotonic() - t0
-
-    gen = np.asarray(jnp.concatenate(out_tokens, axis=1))
-    tps = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
-    print(f"prefill: {t_prefill*1e3:.1f} ms for {args.batch}x{args.prompt_len}")
-    print(f"decode:  {t_decode*1e3:.1f} ms for {args.gen-1} steps "
-          f"({tps:.1f} tok/s)")
+    pf = s["prefill"]
+    print(f"prefill: {pf['seconds']*1e3:.1f} ms for "
+          f"{args.batch}x{args.prompt_len}")
+    dec = s.get("decode", {"seconds": 0.0, "calls": 0})  # --gen 1: no steps
+    print(f"decode:  {dec['seconds']*1e3:.1f} ms for {dec['calls']} steps "
+          f"({dec.get('tok_per_s', 0.0):.1f} tok/s)"
+          + (" [two-phase]" if loop.two_phase else ""))
+    for phase in ("route", "execute"):
+        if phase in s:
+            print(f"{phase}:   {s[phase]['seconds']*1e3:.1f} ms over "
+                  f"{s[phase]['calls']} layer calls (within decode)")
+    if "stream" in s:
+        st = s["stream"]
+        print(f"stream:  nnzb {st['nnzb_stream_mean']:.1f} (bucketed) vs "
+              f"{st['grid_nnzb']} full-grid blocks; "
+              f"{s['compile_signatures']} phase-2 compile signature(s)")
     print("sample generations (token ids):")
     for b in range(min(args.batch, 2)):
         print(f"  [{b}] {gen[b, :16].tolist()}")

@@ -84,9 +84,11 @@ def _window_for(kind: str, cfg: ArchConfig) -> Optional[int]:
 
 
 def apply_block(kind: str, p: Params, x, cfg: ArchConfig, *, impl="chunked",
-                cache=None, pos=None, collect_kv: int = 0):
+                cache=None, pos=None, collect_kv: int = 0, moe_fn=None):
     """One sub-layer. Returns (x, new_cache). ``collect_kv`` > 0 makes the
-    prefill path emit a decode cache of that capacity."""
+    prefill path emit a decode cache of that capacity.  ``moe_fn`` overrides
+    ``moe.apply_moe`` for attn+moe blocks (same signature/returns) -- the
+    two-phase serving loop injects its route-then-execute stage here."""
     if kind in ATTN_KINDS:
         h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
         attn_cache = cache.get("attn") if cache else None
@@ -99,7 +101,7 @@ def apply_block(kind: str, p: Params, x, cfg: ArchConfig, *, impl="chunked",
         if kind == "attn+moe":
             # thread the routing occupancy (prefix-stable slots): decode
             # passes the cached per-(row, expert) counts + absolute position
-            f, moe_counts = moe.apply_moe(
+            f, moe_counts = (moe_fn or moe.apply_moe)(
                 p["ffn"], h, cfg, counts=cache.get("moe") if cache else None,
                 pos=pos)
         else:
@@ -371,7 +373,7 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
     return out
 
 
-def _decode_block_attn(kind, p, x, cfg, cache, pos, dtype):
+def _decode_block_attn(kind, p, x, cfg, cache, pos, dtype, moe_fn=None):
     """Attention decode with ring-buffer handling for local layers."""
     window = _window_for(kind, cfg)
     kc = cache["attn"]["k"]
@@ -393,7 +395,7 @@ def _decode_block_attn(kind, p, x, cfg, cache, pos, dtype):
         # ring buffers exist only for attn_local layers, which are never MoE
         f = L.apply_mlp(p["ffn"], h, cfg)
         return x + f, {"attn": {"k": knew, "v": vnew}}
-    return apply_block(kind, p, x, cfg, cache=cache, pos=pos)
+    return apply_block(kind, p, x, cfg, cache=cache, pos=pos, moe_fn=moe_fn)
 
 
 def decode_step(params: Params, cfg: ArchConfig, cache, pos, tokens_1,
@@ -440,6 +442,72 @@ def decode_step(params: Params, cfg: ArchConfig, cache, pos, tokens_1,
     x, slot_caches = jax.lax.scan(
         body, x, (params["blocks"], cache["slots"], steps))
     new_cache["slots"] = slot_caches
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    unemb = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    return (x @ unemb.astype(cd)).astype(jnp.float32), new_cache
+
+
+def decode_step_layered(params: Params, cfg: ArchConfig, cache, pos,
+                        tokens_1, dtype=jnp.bfloat16, *, moe_fn=None
+                        ) -> Tuple[jax.Array, Any]:
+    """One-token decode with the repeat loop unrolled at the Python level.
+
+    Computes the same function as :func:`decode_step`, but layer by layer
+    instead of one ``lax.scan`` -- which is what lets a serving loop
+    interleave *host-side* work between layers: the two-phase MoE stage
+    (``launch.serve.ServeLoop``) routes each attn+moe layer eagerly and runs
+    only the expert/combine phase compiled, something a scan body can never
+    yield back for.  ``moe_fn`` is threaded to every attn+moe block
+    (signature of ``moe.apply_moe``); ``pos`` should be concrete here (a
+    Python int) so host routing sees real positions.
+    """
+    pol = precision_policy(cfg.policy)
+    cd = pol.compute_dtype
+    x = jnp.take(params["embed"], tokens_1, axis=0).astype(cd)
+    shared_p = params.get("shared_attn")
+    new_cache = dict(cache)
+
+    def take(tree, i):
+        return jax.tree.map(lambda a: a[i], tree)
+
+    def restack(per_step):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
+
+    if "prologue" in params:
+        pro = []
+        for i in range(cfg.n_prologue):
+            x, nc = apply_block(cfg.block_unit[0], take(params["prologue"], i),
+                                x, cfg, cache=take(cache["prologue"], i),
+                                pos=pos, moe_fn=moe_fn)
+            pro.append(nc)
+        new_cache["prologue"] = restack(pro)
+
+    per_step = []
+    for i in range(cfg.n_repeats):
+        new_slots = []
+        for slot, kind in enumerate(cfg.block_unit):
+            p_i = take(params["blocks"][slot], i)
+            c_i = take(cache["slots"][slot], i)
+            if kind in ATTN_KINDS:
+                x, nc = _decode_block_attn(kind, p_i, x, cfg, c_i, pos,
+                                           dtype, moe_fn=moe_fn)
+            else:
+                x, nc = apply_block(kind, p_i, x, cfg, cache=c_i, pos=pos)
+            new_slots.append(nc)
+        if cfg.shared_attn_every:
+            c_i = take(cache["slots"][-1], i)
+            # step index is concrete here, so the fire test is plain Python
+            if (i % cfg.shared_attn_every) == (cfg.shared_attn_every - 1):
+                x, nc = _decode_block_attn("shared_attn", shared_p, x, cfg,
+                                           c_i, pos, dtype)
+            else:
+                nc = c_i
+            new_slots.append(nc)
+        per_step.append(tuple(new_slots))
+    new_cache["slots"] = tuple(
+        restack([step[s] for step in per_step])
+        for s in range(len(per_step[0])))
+
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     unemb = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
     return (x @ unemb.astype(cd)).astype(jnp.float32), new_cache

@@ -42,18 +42,29 @@ multiplies by exact 0/1 blocks with f32 accumulation), so the backends are
 interchangeable mid-deployment.  The grouped expert GEMM consumes dense
 (E, B*C, d) tiles and combine gathers results back by the same index stream.
 
+**Two-phase serving** (:func:`route_moe` / :func:`execute_moe`) -- the
+route-then-compile split that keeps the bcsr stream sparse *under jit*:
+phase 1 routes eagerly and compacts the dispatch stream to its union
+nonzero-block pattern on host, padded to a power-of-two nnzb bucket
+(``engine.stream_bucket``); phase 2 is a jit-compiled dispatch+FFN+combine
+whose compile cache keys on the bucket, so recompiles are bounded while
+the streamed work tracks the *routed* blocks, not the ``E*C x T`` grid.
+``launch.serve.ServeLoop`` drives this per decode step.
+
 Expert-parallel: the leading E dim of expert weights shards over the
 "model" axis; the gather/scatter becomes an all-to-all under pjit.
 """
 from __future__ import annotations
 
+import functools
 import warnings
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.formats import _pytree_dataclass
 from repro.models.config import ArchConfig
 from repro.models.layers import init_mlp, apply_mlp
 
@@ -176,14 +187,93 @@ def _dispatch_gather(xt: jax.Array, flat_slot: jax.Array, E: int, C: int):
     return xe.reshape(B, E, C, d).transpose(1, 0, 2, 3)
 
 
+def _dispatch_matrix_tiles(flat_slot: jax.Array, S: int, E: int, C: int,
+                           bm: int, bk: int, dtype):
+    """(bm, bk)-tiled 0/1 dispatch matrix for the bcsr backends.
+
+    Returns (tiles4 (B, gm, gn, bm, bk), Mp, Sp): the (slot, token) dispatch
+    matrix per batch row, zero-padded to block multiples; dropped tokens
+    write the slice-off row ``Mp`` so they vanish from every tile."""
+    B = flat_slot.shape[0]
+    M = E * C
+    Mp = -(-M // bm) * bm
+    Sp = -(-S // bk) * bk
+    gm, gn = Mp // bm, Sp // bk
+    rows = jnp.where(flat_slot < M, flat_slot, Mp)
+    disp = jnp.zeros((B, Mp + 1, Sp), dtype)
+    disp = disp.at[jnp.arange(B)[:, None], rows,
+                   jnp.arange(S, dtype=jnp.int32)[None, :]].set(1)[:, :Mp]
+    return disp.reshape(B, gm, bm, gn, bk).transpose(0, 1, 3, 2, 4), Mp, Sp
+
+
+def _build_routed_stream(flat_slot, S: int, E: int, C: int, bm: int,
+                         bk: int, dtype, min_bucket: Optional[int] = None):
+    """Compacted dispatch stream straight from *concrete* slots, host-side.
+
+    The single construction site for the routed-stream semantics shared by
+    the eager bcsr backend and phase 1 of the two-phase loop: union
+    nonzero-block pattern over the batch, every-block-row-appears coverage
+    (kernel contract, zero block at col 0), (row, col)-sorted stream.
+    Cost is O(B*S + nnzb*bm*bk) -- it never touches the dense E*C x T
+    grid, only the one (slot, token) entry each kept token contributes.
+
+    ``min_bucket`` set (the two-phase path) pads the stream to its
+    power-of-two bucket *here*, while everything is still host numpy --
+    one device allocation/transfer at final size, instead of transferring
+    exact-size then concatenating on device (``with_capacity``).  Pad
+    entries repeat the last coordinate with zero blocks, same semantics.
+
+    Returns (BatchedBCSR, nnzb_routed, nnzb_covered): data blocks before
+    row coverage, and the covered (pre-bucket) stream length."""
+    from repro.core.formats import BatchedBCSR
+    from repro.kernels import engine
+
+    fs = np.asarray(flat_slot)
+    B = fs.shape[0]
+    M = E * C
+    Mp = -(-M // bm) * bm
+    Sp = -(-S // bk) * bk
+    gm, gn = Mp // bm, Sp // bk
+    b_idx, s_idx = np.nonzero(fs < M)        # kept tokens (dropped = M)
+    slots = fs[b_idx, s_idx]
+    keys = (slots // bm).astype(np.int64) * gn + s_idx // bk
+    coords = np.unique(keys)                  # sorted == (row, col)-sorted
+    nnzb_routed = len(coords)
+    present = np.zeros(gm, bool)
+    present[(coords // gn).astype(np.int32)] = True
+    coords = np.union1d(coords,
+                        np.nonzero(~present)[0].astype(np.int64) * gn)
+    nnzb_covered = len(coords)
+    idx = np.searchsorted(coords, keys)       # before any bucket padding
+    cap = nnzb_covered
+    if min_bucket is not None:
+        cap = engine.stream_bucket(nnzb_covered, minimum=min_bucket)
+        coords = np.concatenate(
+            [coords, np.full(cap - nnzb_covered, coords[-1])])
+    brows = (coords // gn).astype(np.int32)
+    bcols = (coords % gn).astype(np.int32)
+    blocks = np.zeros((B, cap, bm, bk), np.dtype(dtype))
+    blocks[b_idx, idx, slots % bm, s_idx % bk] = 1
+    indptr = np.zeros(gm + 1, np.int32)
+    np.cumsum(np.bincount(brows, minlength=gm), out=indptr[1:])
+    stream = BatchedBCSR(indptr=jnp.asarray(indptr),
+                         block_rows=jnp.asarray(brows),
+                         block_cols=jnp.asarray(bcols),
+                         blocks=jnp.asarray(blocks),
+                         shape=(B, Mp, Sp), block=(bm, bk))
+    return stream, nnzb_routed, nnzb_covered
+
+
 def _dispatch_bcsr(xt: jax.Array, flat_slot: jax.Array, E: int, C: int):
     """Dispatch-as-SpMM: per-row 0/1 dispatch matrices as one BatchedBCSR
     (shared index stream) through the sharded SpMM Pallas kernel.
 
     Eagerly the stream compacts to the union nonzero-block pattern; under
-    tracing the pattern is the full grid (static shapes), which is the
-    one-hot-einsum cost paid on the *kernel* path.  Returns (E, B, C, d),
-    bit-identical to :func:`_dispatch_gather` (0/1 blocks, f32 accumulate).
+    tracing the pattern is the full grid (static shapes) -- serving callers
+    avoid that cost by routing eagerly first (:func:`route_moe`) and running
+    the compiled phase on the compacted stream (:func:`execute_moe`).
+    Returns (E, B, C, d), bit-identical to :func:`_dispatch_gather` (0/1
+    blocks, f32 accumulate).
     """
     from repro.core.formats import BatchedBCSR
     from repro.kernels import engine, tuning
@@ -192,36 +282,47 @@ def _dispatch_bcsr(xt: jax.Array, flat_slot: jax.Array, E: int, C: int):
     tiles = tuning.moe_dispatch_tiles(d, xt.dtype)
     bm, bk = tiles["block"]
     M = E * C
-    Mp = -(-M // bm) * bm
-    Sp = -(-S // bk) * bk
-    gm, gn = Mp // bm, Sp // bk
 
-    # dense (B, Mp, Sp) dispatch matrix; dropped tokens write the slice-off row
-    rows = jnp.where(flat_slot < M, flat_slot, Mp)
-    disp = jnp.zeros((B, Mp + 1, Sp), xt.dtype)
-    disp = disp.at[jnp.arange(B)[:, None], rows,
-                   jnp.arange(S, dtype=jnp.int32)[None, :]].set(1)[:, :Mp]
-    tiles4 = disp.reshape(B, gm, bm, gn, bk).transpose(0, 1, 3, 2, 4)
-
-    if isinstance(tiles4, jax.core.Tracer):
-        # static shapes under jit/scan: the stream is the full grid
+    if isinstance(flat_slot, jax.core.Tracer):
+        # static shapes under jit/scan: the stream is the full grid, block
+        # values come from the (traced) dense dispatch matrix.  The index
+        # stream stays host-side numpy: it is routing-independent here and
+        # the engine inspects it with numpy before the call.
+        tiles4, Mp, Sp = _dispatch_matrix_tiles(flat_slot, S, E, C, bm, bk,
+                                                xt.dtype)
+        gm, gn = Mp // bm, Sp // bk
         brows, bcols = np.nonzero(np.ones((gm, gn), bool))
+        indptr = np.zeros(gm + 1, np.int32)
+        np.cumsum(np.bincount(brows, minlength=gm), out=indptr[1:])
+        ab = BatchedBCSR(indptr=indptr,
+                         block_rows=brows.astype(np.int32),
+                         block_cols=bcols.astype(np.int32),
+                         blocks=tiles4[:, brows, bcols],
+                         shape=(B, Mp, Sp), block=(bm, bk))
     else:
-        nz = np.array(jnp.any(tiles4 != 0, axis=(0, 3, 4)))
-        nz[:, 0] = True  # kernel contract: every block-row appears
-        brows, bcols = np.nonzero(nz)
-    indptr = np.zeros(gm + 1, np.int32)
-    np.cumsum(np.bincount(brows, minlength=gm), out=indptr[1:])
-    # index stream stays host-side numpy: it is static (routing-independent
-    # under tracing) and the engine inspects it with numpy before the call
-    ab = BatchedBCSR(indptr=indptr,
-                     block_rows=brows.astype(np.int32),
-                     block_cols=bcols.astype(np.int32),
-                     blocks=tiles4[:, brows, bcols],
-                     shape=(B, Mp, Sp), block=(bm, bk))
+        ab, _, _ = _build_routed_stream(flat_slot, S, E, C, bm, bk,
+                                        xt.dtype)
+        Sp = ab.shape[2]
     xt_p = jnp.pad(xt, ((0, 0), (0, Sp - S), (0, 0)))
     out = engine.shard_spmm_batched(ab, xt_p, bn=tiles["bn"],
                                     out_dtype=xt.dtype)      # (B, Mp, d)
+    return out[:, :M].reshape(B, E, C, d).transpose(1, 0, 2, 3)
+
+
+def _dispatch_stream(xt: jax.Array, stream, E: int, C: int):
+    """Phase-2 dispatch: a pre-built (route_moe) BatchedBCSR stream through
+    the trace-safe engine entry.  Safe under jit -- the index arrays are
+    traced arguments, so the compile cache keys on the *bucketed* stream
+    shape, never on the concrete routing."""
+    from repro.kernels import engine, tuning
+
+    B, S, d = xt.shape
+    _, Mp, Sp = stream.shape
+    tiles = tuning.moe_dispatch_tiles(d, xt.dtype)
+    xt_p = jnp.pad(xt, ((0, 0), (0, Sp - S), (0, 0)))
+    out = engine.shard_spmm_batched_stream(stream, xt_p, bn=tiles["bn"],
+                                           out_dtype=xt.dtype)  # (B, Mp, d)
+    M = E * C
     return out[:, :M].reshape(B, E, C, d).transpose(1, 0, 2, 3)
 
 
@@ -291,15 +392,7 @@ def apply_moe(p, x, cfg: ArchConfig, *, counts: Optional[jax.Array] = None,
         new_counts = counts if counts is not None else jnp.zeros((B, E), jnp.int32)
         return out, new_counts
 
-    G = groups or pctx.MOE_GROUPS
-    if G and B % G != 0:
-        msg = (f"apply_moe: {G} dispatch group(s) requested but the batch "
-               f"dim B={B} is not divisible; the (E, B, C, d) dispatch "
-               "buffer cannot align with the data shards and falls back to "
-               "an ungrouped layout (extra resharding under pjit).")
-        if cfg.moe_strict_dispatch:
-            raise ValueError(msg)
-        warnings.warn(msg, RuntimeWarning, stacklevel=2)
+    _check_groups(B, cfg, groups or pctx.MOE_GROUPS, "apply_moe")
 
     pos0 = 0 if pos is None else pos
     r = route_tokens(p["router"], x, cfg, counts=counts, pos0=pos0)
@@ -314,6 +407,31 @@ def apply_moe(p, x, cfg: ArchConfig, *, counts: Optional[jax.Array] = None,
         xe = _dispatch_gather(x, flat_slot, E, C)
     else:
         raise ValueError(f"unknown moe_dispatch backend {backend!r}")
+    out = _moe_tail(p, x, xe, r.gate, r.keep, flat_slot, cfg, E, C)
+    return out, r.new_counts
+
+
+def _check_groups(B: int, cfg: ArchConfig, G: Optional[int], who: str):
+    if G and B % G != 0:
+        msg = (f"{who}: {G} dispatch group(s) requested but the batch "
+               f"dim B={B} is not divisible; the (E, B, C, d) dispatch "
+               "buffer cannot align with the data shards and falls back to "
+               "an ungrouped layout (extra resharding under pjit).")
+        if cfg.moe_strict_dispatch:
+            raise ValueError(msg)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+
+def _moe_tail(p, x, xe, gate, keep, flat_slot, cfg: ArchConfig, E: int,
+              C: int):
+    """Expert FFN + combine (+ shared expert): everything downstream of the
+    dispatch buffer.  Shared verbatim by :func:`apply_moe` and the two-phase
+    :func:`execute_moe`, so the phases can never drift from the fused layer.
+    """
+    from repro.parallel import context as pctx
+    from repro.parallel.sharding import constrain
+
+    B, S, d = x.shape
     if pctx.MOE_SPEC is not None:
         xe = constrain(xe, pctx.MOE_SPEC)                 # EP all-to-all
 
@@ -329,12 +447,121 @@ def apply_moe(p, x, cfg: ArchConfig, *, counts: Optional[jax.Array] = None,
     yt = ye.transpose(1, 0, 2, 3).reshape(B, E * C, d)
     if pctx.MOE_COMBINE_SPEC is not None:
         yt = constrain(yt, pctx.MOE_COMBINE_SPEC)
-    out = _combine_gather(yt, flat_slot, r.gate, r.keep, E, C)
+    out = _combine_gather(yt, flat_slot, gate, keep, E, C)
 
     if cfg.moe_shared_expert:
         out = out + apply_mlp(p["shared"], x.reshape(B * S, d),
                               cfg).reshape(B, S, d)
-    return out, r.new_counts
+    return out
+
+
+# ------------------------------------------------- two-phase serving API --
+
+@_pytree_dataclass(static=("capacity", "backend"))
+class MoEPlan:
+    """Phase-1 output of the two-phase route-then-compile serving loop.
+
+    Carries exactly what phase 2 consumes -- not the full
+    :class:`Routing` (its logits / slot / expert-id arrays are dead weight
+    in the compiled step and would ride the host->device argument path
+    every decode step).  Array fields are pytree children, so a
+    jit-compiled :func:`execute_moe` takes them as *traced arguments*; the
+    static aux -- the dispatch capacity ``C`` and the backend name -- plus
+    the (bucketed) stream shape are all that key the compile cache.  Two
+    plans with the same token shape, capacity, and nnzb bucket therefore
+    reuse one compiled program no matter how differently their tokens
+    routed."""
+
+    gate: jax.Array          # (B, S) f32 top-1 router probability
+    keep: jax.Array          # (B, S) bool prefix-capacity keep set
+    new_counts: jax.Array    # (B, E) int32 occupancy after this call
+    flat_slot: jax.Array     # (B, S) int32 in [0, E*C]  (E*C = dropped)
+    stream: Optional[object]  # BatchedBCSR dispatch stream ("bcsr") | None
+    capacity: int            # static per-(row, expert) dispatch capacity C
+    backend: str             # "gather" | "bcsr"
+
+
+def route_moe(p, x, cfg: ArchConfig, *, counts: Optional[jax.Array] = None,
+              pos=None, dispatch: Optional[str] = None,
+              groups: Optional[int] = None) -> Tuple[MoEPlan, dict]:
+    """Phase 1: route eagerly, materialize the compacted dispatch stream.
+
+    Runs the (cheap, jittable-but-run-eager) router on a *concrete* ``x``
+    and, for the "bcsr" backend, compacts the 0/1 dispatch matrix to its
+    union nonzero-block stream on host -- the thing tracing fundamentally
+    cannot do, because data-dependent sparsity cannot produce static shapes.
+    The stream is then padded to its power-of-two nnzb bucket
+    (``engine.stream_bucket``, floor from the ``"moe_dispatch"`` autotune
+    row), so the phase-2 compile cache sees a bounded set of stream shapes.
+
+    Returns ``(plan, info)``: ``plan`` feeds :func:`execute_moe` /
+    :func:`execute_moe_jit`; ``info`` is host-side stats -- ``nnzb_routed``
+    (data blocks in the union pattern), ``nnzb_covered`` (+ the kernel's
+    every-row-appears coverage blocks), ``nnzb_stream`` (after bucketing),
+    ``grid_nnzb`` (what the single-phase jit fallback would stream), and
+    ``bucket``.
+    """
+    from repro.parallel import context as pctx
+    from repro.kernels import tuning
+
+    if isinstance(x, jax.core.Tracer):
+        raise TypeError(
+            "route_moe is the eager phase of the two-phase serving loop; "
+            "call it outside jit and feed its plan to execute_moe (the "
+            "compiled phase). Tracing the router would force the dispatch "
+            "stream back to the full grid.")
+    backend = dispatch or pctx.MOE_DISPATCH or cfg.moe_dispatch
+    if backend not in ("gather", "bcsr"):
+        raise ValueError(f"unknown moe_dispatch backend {backend!r}")
+    B, S, d = x.shape
+    E = cfg.n_experts
+    _check_groups(B, cfg, groups or pctx.MOE_GROUPS, "route_moe")
+
+    pos0 = 0 if pos is None else int(pos)  # concrete by contract
+    r = route_tokens(p["router"], x, cfg, counts=counts, pos0=pos0)
+    C = dispatch_capacity(S, cfg, pos0=pos0)
+    flat_slot = jnp.where(r.keep, r.expert_id * C + r.within, E * C)
+
+    stream = None
+    info = {"backend": backend, "capacity": C, "tokens": S}
+    if backend == "bcsr":
+        tiles = tuning.moe_dispatch_tiles(d, x.dtype)
+        bm, bk = tiles["block"]
+        stream, nnzb_routed, nnzb_covered = _build_routed_stream(
+            flat_slot, S, E, C, bm, bk, x.dtype,
+            min_bucket=tiles["min_bucket"])
+        gm, gn = stream.grid_shape
+        info.update(nnzb_routed=nnzb_routed, nnzb_covered=nnzb_covered,
+                    nnzb_stream=stream.nnzb, grid_nnzb=gm * gn,
+                    bucket=stream.nnzb, block=(bm, bk))
+    plan = MoEPlan(gate=r.gate, keep=r.keep, new_counts=r.new_counts,
+                   flat_slot=flat_slot, stream=stream, capacity=C,
+                   backend=backend)
+    return plan, info
+
+
+def execute_moe(p, x, plan: MoEPlan, cfg: ArchConfig):
+    """Phase 2: dispatch + expert FFN + combine from a phase-1 plan.
+
+    Pure and jit-friendly: all data-dependence is frozen into ``plan``'s
+    arrays, whose shapes are bucketed, so compiling this (see
+    :func:`execute_moe_jit`) retraces only per (token shape, capacity,
+    nnzb-bucket) -- never per routing pattern.  Bit-identical to
+    ``apply_moe(..., dispatch=plan.backend)`` on the same inputs: the
+    dispatch buffer is built from the same 0/1 blocks and everything
+    downstream is the shared :func:`_moe_tail`."""
+    E, C = cfg.n_experts, plan.capacity
+    if plan.backend == "bcsr":
+        xe = _dispatch_stream(x, plan.stream, E, C)
+    else:
+        xe = _dispatch_gather(x, plan.flat_slot, E, C)
+    out = _moe_tail(p, x, xe, plan.gate, plan.keep, plan.flat_slot, cfg, E,
+                    C)
+    return out, plan.new_counts
+
+
+execute_moe_jit = functools.partial(jax.jit, static_argnames=("cfg",))(
+    execute_moe)
 
 
 def load_balance_loss(logits: jax.Array, expert_id: jax.Array, E: int):

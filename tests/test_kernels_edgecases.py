@@ -50,6 +50,25 @@ def test_spmm_trailing_rows_empty():
                                atol=1e-4, rtol=1e-4)
 
 
+def test_spmm_explicit_bn_must_be_lane_aligned():
+    """Explicit bn overrides are honored exactly or rejected loudly: the
+    old silent min(bn, max(128, n)) clamp turned bn=100 into an unaligned
+    tile and rewrote bn=256 under small N."""
+    a = bcsr_from_dense(random_dense_sparse(RNG, (32, 32), 0.4), (8, 8))
+    b = jnp.asarray(RNG.standard_normal((32, 64)), jnp.float32)
+    for bad in (100, 64, -128, 0):
+        with pytest.raises(ValueError, match="multiple of the 128-lane"):
+            spmm_ops.spmm(a, b, bn=bad, interpret=True)
+    ab = batched_bcsr_from_dense(
+        np.stack([random_dense_sparse(RNG, (32, 32), 0.4)] * 2), (8, 8))
+    with pytest.raises(ValueError, match="multiple of the 128-lane"):
+        spmm_ops.spmm_batched(ab, b, bn=100, interpret=True)
+    # an aligned override wider than N is legal: pad-and-strip, same bits
+    got = spmm_ops.spmm(a, b, bn=256, interpret=True)
+    want = spmm_ops.spmm(a, b, bn=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 @pytest.mark.parametrize("N", [1, 7, 129, 200])
 def test_spmm_n_not_multiple_of_default_bn(N):
     """N smaller / larger than (and coprime to) the tuned bn."""
