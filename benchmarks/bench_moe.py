@@ -21,12 +21,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import emit_bench, row, time_fn
 from repro.configs import get_smoke
 from repro.core.formats import batched_bcsr_from_dense, bcsr_from_dense
 from repro.kernels import tuning
 from repro.kernels.spmm import ops as spmm_ops
 from repro.models import moe as moe_mod
+from repro.models import model as M
+from repro.models.config import ArchConfig
 
 T, D, E, CF = 4096, 256, 16, 1.25
 FF = 512
@@ -34,7 +36,109 @@ FF = 512
 TB, DB = 512, 128
 
 
-def run() -> list:
+def run_host_dispatch(bench_json: dict) -> list:
+    """The decode-step host-dispatch tax, before/after PR 5.
+
+    Two A/Bs, both at decode shapes:
+    * **route phase**: PR 3 ran phase-1 routing op-by-op eagerly; it is now
+      one jitted program (``moe._route_phase1_jit``) plus the host stream
+      compaction.
+    * **layered decode step**: PR 3's ``decode_step_layered`` called every
+      block eagerly; layers now run as cached jitted steps.  The eager twin
+      below reproduces the PR-3 body verbatim (``apply_block`` /
+      ``_decode_block_attn`` op-by-op) on the same model/cache.
+    """
+    rng = np.random.default_rng(0)
+    rows = []
+    cfg_b = dataclasses.replace(
+        get_smoke("llama4-scout-17b-a16e"), d_model=DB, d_ff=FF, n_experts=E,
+        capacity_factor=CF, moe_shared_expert=False)
+    params_b = moe_mod.init_moe(jax.random.PRNGKey(0), cfg_b)
+    Bd = 4
+    x1 = jnp.asarray(rng.standard_normal((Bd, 1, DB)), jnp.float32)
+    counts0 = jnp.zeros((Bd, E), jnp.int32)
+    pos0 = 7
+    C1 = moe_mod.dispatch_capacity(1, cfg_b, pos0=pos0)
+
+    def route_eager_pr3():
+        # the PR-3 phase 1: eager op-by-op router + slot cumsums
+        r = moe_mod.route_tokens(params_b["router"], x1, cfg_b,
+                                 counts=counts0, pos0=pos0)
+        return jnp.where(r.keep, r.expert_id * C1 + r.within, E * C1)
+
+    def route_jit():
+        return moe_mod._route_phase1_jit(
+            params_b["router"], x1, cfg_b, counts0,
+            jnp.asarray(pos0, jnp.int32), C1)[3]
+
+    t_eager = time_fn(route_eager_pr3)
+    t_jit = time_fn(route_jit)
+    rows.append(row("moe/route_host_dispatch(eager_pr3)", t_eager * 1e6,
+                    f"tokens={Bd}x1;experts={E}"))
+    rows.append(row("moe/route_host_dispatch(jit)", t_jit * 1e6,
+                    f"speedup_vs_pr3={t_eager / t_jit:.2f}x"))
+
+    # --- layered decode step: cached jitted layers vs the PR-3 eager body --
+    tiny = ArchConfig(
+        name="bench-moe-tiny", family="moe", d_model=32, n_heads=2,
+        n_kv_heads=1, d_ff=48, vocab_size=64,
+        block_unit=("attn", "attn+moe"), n_repeats=2, head_dim=16,
+        n_experts=4, top_k=1, capacity_factor=1.0, moe_shared_expert=True,
+        policy="f32")
+    params_t = M.init_params(jax.random.PRNGKey(0), tiny)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 tiny.vocab_size)
+    logits, cache, pos = M.prefill(params_t, prompts, tiny, max_seq=16,
+                                   cache_dtype=jnp.float32)
+    tok = jnp.argmax(logits[:, -1, :tiny.vocab_size],
+                     axis=-1)[:, None].astype(jnp.int32)
+    pos = int(pos)
+
+    def step_jit_layers():
+        lg, _ = M.decode_step_layered(params_t, tiny, cache, pos, tok,
+                                      dtype=jnp.float32)
+        return lg
+
+    def step_eager_pr3():
+        # PR-3 decode_step_layered body, verbatim: every block op-by-op
+        x = jnp.take(params_t["embed"], tok, axis=0).astype(jnp.float32)
+        take = lambda tree, i: jax.tree.map(lambda a: a[i], tree)  # noqa: E731
+        for i in range(tiny.n_repeats):
+            for slot, kind in enumerate(tiny.block_unit):
+                p_i = take(params_t["blocks"][slot], i)
+                c_i = take(cache["slots"][slot], i)
+                if kind in M.ATTN_KINDS:
+                    x, _ = M._decode_block_attn(kind, p_i, x, tiny, c_i, pos,
+                                                jnp.float32)
+                else:
+                    x, _ = M.apply_block(kind, p_i, x, tiny, cache=c_i,
+                                         pos=pos)
+        from repro.models import layers as L
+        x = L.rmsnorm(params_t["final_norm"], x, tiny.norm_eps)
+        unemb = (params_t["embed"].T if tiny.tie_embeddings
+                 else params_t["unembed"])
+        return (x @ unemb.astype(x.dtype)).astype(jnp.float32)
+
+    t_step_jit = time_fn(step_jit_layers)
+    t_step_eager = time_fn(step_eager_pr3)
+    rows.append(row("moe/decode_step_layered(eager_pr3)", t_step_eager * 1e6,
+                    "layers=4;op_by_op"))
+    rows.append(row("moe/decode_step_layered(jit_layers)", t_step_jit * 1e6,
+                    f"speedup_vs_pr3={t_step_eager / t_step_jit:.2f}x"))
+    bench_json["host_dispatch"] = {
+        "route_eager_pr3_us": t_eager * 1e6,
+        "route_jit_us": t_jit * 1e6,
+        "route_speedup": t_eager / t_jit,
+        "decode_step_eager_pr3_us": t_step_eager * 1e6,
+        "decode_step_jit_layers_us": t_step_jit * 1e6,
+        "decode_step_speedup": t_step_eager / t_step_jit,
+        "shapes": {"route": [Bd, 1, DB], "tiny_arch": tiny.name,
+                   "decode_layers": tiny.n_repeats * len(tiny.block_unit)},
+    }
+    return rows
+
+
+def run(bench_json: dict | None = None) -> list:
     rng = np.random.default_rng(0)
     rows = []
     cfg = dataclasses.replace(
@@ -106,6 +210,16 @@ def run() -> list:
         lambda: moe_mod.execute_moe_jit(params_b, xb_in, plan, cfg_b)[0])
     got2p = moe_mod.execute_moe_jit(params_b, xb_in, plan, cfg_b)[0]
     assert float(jnp.abs(ref - got2p).max()) == 0.0, "two-phase diverges"
+    if bench_json is not None:
+        bench_json["two_phase"] = {
+            "tokens": TB, "experts": E, "d_model": DB,
+            "route_us": t_route * 1e6, "exec_us": t_exec * 1e6,
+            "gather_jit_us": t_gth * 1e6,
+            "nnzb_stream": info["nnzb_stream"],
+            "nnzb_routed": info["nnzb_routed"],
+            "grid_nnzb": info["grid_nnzb"],
+            "stream_reduction": info["grid_nnzb"] / info["nnzb_stream"],
+        }
 
     # BCSR-on-kernel: dispatch matrix (T x T permutation-ish) as block-sparse
     sel = rng.permutation(T)[: T // 4]
@@ -159,4 +273,10 @@ def run() -> list:
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    bench_json: dict = {}
+    rows = run(bench_json)
+    rows += run_host_dispatch(bench_json)
+    bench_json["rows"] = rows
+    path = emit_bench("moe", bench_json)
+    print("\n".join(rows))
+    print(f"# wrote {path}")

@@ -32,10 +32,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import PEAK_FLOPS, row, time_fn
+from benchmarks.common import PEAK_FLOPS, emit_bench, row, time_fn
 from repro.core.formats import (banded_sparse, bcsr_from_dense, csr_from_dense,
                                 powerlaw_sparse, random_dense_sparse)
 from repro.kernels.spmm import ops as spmm_ops
+from repro.kernels.spmm.kernel import stream_walks
 
 M, K, N = 1024, 1024, 512
 
@@ -164,6 +165,52 @@ def run_batched() -> list:
     return rows
 
 
+def run_residency(bench_json: dict) -> list:
+    """Multi-tile output residency: ``nt`` N-tiles of the output row stay
+    VMEM-resident per walk of the index/block stream, so the stream reread
+    factor drops from ``N/bn`` to ``N/(nt*bn)``.  Structural counts come
+    from ``kernel.stream_walks`` (exact, backend-independent); wall times
+    are interpret-mode (relative only).  Results feed BENCH_spmm.json."""
+    rng = np.random.default_rng(0)
+    rows = []
+    bn = 128
+    res_cases = [
+        ("blockuniform_5pct", _block_uniform(rng, (M, K), 0.05)),
+        ("banded_bw16", banded_sparse(rng, (M, K), 16)),
+    ]
+    b = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    bench_json["residency"] = {"shapes": {"M": M, "K": K, "N": N,
+                                          "block": [8, 8], "bn": bn},
+                               "cases": {}}
+    for name, a_dense in res_cases:
+        a = bcsr_from_dense(a_dense, (8, 8))
+        case = {"nnzb": int(a.nnzb)}
+        ref = None
+        for nt in (1, 2, 4):
+            t = time_fn(lambda nt=nt: spmm_ops.spmm(a, b, bn=bn, nt=nt,
+                                                    interpret=True))
+            walks = stream_walks(N, bn, nt)
+            out = np.asarray(spmm_ops.spmm(a, b, bn=bn, nt=nt,
+                                           interpret=True))
+            if ref is None:
+                ref = out
+            case[f"nt{nt}"] = {
+                "t_us": t * 1e6,
+                "stream_walks": walks,
+                "stream_blocks_read": walks * int(a.nnzb),
+                "bit_identical_to_nt1": bool((out == ref).all()),
+            }
+            rows.append(row(
+                f"spmm/{name}/residency_nt{nt}", t * 1e6,
+                f"stream_walks={walks};"
+                f"reread_factor={walks};"
+                f"bit_identical={(out == ref).all()}"))
+        case["reread_reduction_nt4_vs_nt1"] = (
+            case["nt1"]["stream_walks"] / case["nt4"]["stream_walks"])
+        bench_json["residency"]["cases"][name] = case
+    return rows
+
+
 def run() -> list:
     rng = np.random.default_rng(0)
     rows = []
@@ -197,4 +244,10 @@ if __name__ == "__main__":
     elif "--batched" in sys.argv:
         print("\n".join(run_batched()))
     else:
-        print("\n".join(run()))
+        bench_json: dict = {}
+        rows = run()
+        rows += run_residency(bench_json)
+        bench_json["rows"] = rows
+        path = emit_bench("spmm", bench_json)
+        print("\n".join(rows))
+        print(f"# wrote {path}")

@@ -4,11 +4,19 @@ This container is CPU-only, so wall-clock numbers are XLA-CPU times; they are
 meaningful for *relative* comparisons (the paper's +/-SU contrast), while
 TPU-absolute projections come from the roofline terms (see EXPERIMENTS.md
 SRoofline). Every row carries both.
+
+Machine-readable artifacts: :func:`emit_bench` writes ``BENCH_<name>.json``
+next to this file (shapes, tok/s, stream counts, reread factors ...) so the
+perf trajectory is tracked *across PRs* -- each benchmark overwrites its own
+artifact, and diffs of the JSON are the regression record.
 """
 from __future__ import annotations
 
+import json
+import os
+import platform
 import time
-from typing import Callable
+from typing import Any, Callable, Dict
 
 import jax
 
@@ -37,3 +45,39 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def emit_bench(name: str, payload: Dict[str, Any], *,
+               directory: str | None = None) -> str:
+    """Write ``BENCH_<name>.json``: the machine-readable benchmark artifact.
+
+    ``payload`` is the benchmark's own schema (shapes, timings, stream
+    counts, reread factors); this only adds the environment header every
+    artifact shares.  Returns the written path.  Values must be
+    JSON-serializable -- numpy scalars are coerced."""
+    def coerce(v):
+        if isinstance(v, dict):
+            return {str(k): coerce(x) for k, x in v.items()}
+        if isinstance(v, (list, tuple)):
+            return [coerce(x) for x in v]
+        if hasattr(v, "item") and not isinstance(v, (str, bytes)):
+            try:
+                return v.item()
+            except Exception:
+                return str(v)
+        return v
+
+    doc = {"bench": name,
+           "backend": jax.default_backend(),
+           "device_count": jax.device_count(),
+           "jax_version": jax.__version__,
+           "platform": platform.platform(),
+           **coerce(payload)}
+    path = os.path.join(directory or BENCH_DIR, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=False)
+        f.write("\n")
+    return path

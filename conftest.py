@@ -32,6 +32,9 @@ def pytest_addoption(parser):
     parser.addoption(
         "--run-serve", action="store_true", default=False,
         help="run tests marked serve (full serving-loop smoke)")
+    parser.addoption(
+        "--run-bench", action="store_true", default=False,
+        help="run tests marked bench (benchmark-harness smoke)")
 
 
 def pytest_collection_modifyitems(config, items):
@@ -51,9 +54,10 @@ def pytest_collection_modifyitems(config, items):
         arg.endswith(".py") or "::" in arg for arg in config.args)
     if config.getoption("-m") or named_explicitly:
         return
-    # slow and serve are independently opt-in tiers
+    # slow, serve, and bench are independently opt-in tiers
     skip_marks = {m for m, opt in (("slow", "--run-slow"),
-                                   ("serve", "--run-serve"))
+                                   ("serve", "--run-serve"),
+                                   ("bench", "--run-bench"))
                   if not config.getoption(opt)}
     selected = [i for i in items
                 if not any(m in i.keywords for m in skip_marks)]

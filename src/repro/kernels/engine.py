@@ -166,9 +166,9 @@ def _pad_dim(x: jax.Array, dim: int, multiple: int, value=0) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _sharded_spmm_fn(mesh: Mesh, axis: str, gm: int, bn: int, out_dtype: str,
-                     interpret: bool):
-    kern = functools.partial(spmm_bcsr, n_block_rows=gm, bn=bn,
+def _sharded_spmm_fn(mesh: Mesh, axis: str, gm: int, bn: int, nt: int,
+                     out_dtype: str, interpret: bool):
+    kern = functools.partial(spmm_bcsr, n_block_rows=gm, bn=bn, nt=nt,
                              out_dtype=jnp.dtype(out_dtype), interpret=interpret)
     return jax.jit(compat_shard_map(
         lambda rows, cols, blocks, dense: kern(rows, cols, blocks, dense),
@@ -180,22 +180,28 @@ def _sharded_spmm_fn(mesh: Mesh, axis: str, gm: int, bn: int, out_dtype: str,
 
 
 def shard_spmm(a: BCSR, dense: jax.Array, *, mesh: Optional[Mesh] = None,
-               bn: Optional[int] = None, out_dtype=jnp.float32,
+               bn: Optional[int] = None, nt: Optional[int] = None,
+               out_dtype=jnp.float32,
                interpret: Optional[bool] = None) -> jax.Array:
     """C = A @ dense with dense's N-tiles partitioned across the mesh.
 
-    Handles uneven splits: N is zero-padded up to ``n_dev * bn`` granularity
-    and the pad is stripped after the gather, so any N works on any mesh."""
+    Handles uneven splits: N is zero-padded up to ``n_dev * nt * bn``
+    granularity and the pad is stripped after the gather, so any N works on
+    any mesh.  ``nt`` is the per-device output-residency width (each device
+    re-walks the replicated index stream ``ceil(N_local / (nt*bn))``
+    times)."""
     mesh, axis = auto_mesh(mesh)
     n_dev = mesh.shape[axis]
     interpret = _interpret_default(interpret)
     a = spmm_ops.pad_empty_rows(a)
     K, N = dense.shape
     assert K == a.shape[1], (a.shape, dense.shape)
-    bn = spmm_ops._resolve_bn(bn, max(1, N // n_dev), dense.dtype, a.block[1])
-    dense = _pad_dim(dense, 1, n_dev * bn)
+    n_local = max(1, N // n_dev)
+    bn = spmm_ops._resolve_bn(bn, n_local, dense.dtype, a.block[1])
+    nt = spmm_ops._resolve_nt(nt, bn, n_local, dense.dtype, a.block[1])
+    dense = _pad_dim(dense, 1, n_dev * nt * bn)
     gm, _ = a.grid_shape
-    fn = _sharded_spmm_fn(mesh, axis, gm, bn, jnp.dtype(out_dtype).name,
+    fn = _sharded_spmm_fn(mesh, axis, gm, bn, nt, jnp.dtype(out_dtype).name,
                           interpret)
     out = fn(a.block_rows, a.block_cols, a.blocks, dense)
     return out[:, :N]
@@ -206,9 +212,9 @@ def shard_spmm(a: BCSR, dense: jax.Array, *, mesh: Optional[Mesh] = None,
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _sharded_spmm_batched_fn(mesh: Mesh, axis: str, gm: int, bn: int,
+def _sharded_spmm_batched_fn(mesh: Mesh, axis: str, gm: int, bn: int, nt: int,
                              out_dtype: str, interpret: bool):
-    kern = functools.partial(spmm_bcsr, n_block_rows=gm, bn=bn,
+    kern = functools.partial(spmm_bcsr, n_block_rows=gm, bn=bn, nt=nt,
                              out_dtype=jnp.dtype(out_dtype), interpret=interpret)
 
     def local(rows, cols, blocks, dense):
@@ -226,6 +232,7 @@ def _sharded_spmm_batched_fn(mesh: Mesh, axis: str, gm: int, bn: int,
 def shard_spmm_batched_stream(a: BatchedBCSR, dense: jax.Array, *,
                               mesh: Optional[Mesh] = None,
                               bn: Optional[int] = None,
+                              nt: Optional[int] = None,
                               out_dtype=jnp.float32,
                               interpret: Optional[bool] = None) -> jax.Array:
     """Trace-safe batched SpMM on a *pre-normalized* stream.
@@ -249,10 +256,11 @@ def shard_spmm_batched_stream(a: BatchedBCSR, dense: jax.Array, *,
         a.shape, dense.shape)
     N = dense.shape[2]
     bn = spmm_ops._resolve_bn(bn, N, dense.dtype, a.block[1])
-    dense = _pad_dim(_pad_dim(dense, 2, bn), 0, n_dev)
+    nt = spmm_ops._resolve_nt(nt, bn, N, dense.dtype, a.block[1])
+    dense = _pad_dim(_pad_dim(dense, 2, nt * bn), 0, n_dev)
     blocks = _pad_dim(a.blocks, 0, n_dev)
     gm, _ = a.grid_shape
-    fn = _sharded_spmm_batched_fn(mesh, axis, gm, bn,
+    fn = _sharded_spmm_batched_fn(mesh, axis, gm, bn, nt,
                                   jnp.dtype(out_dtype).name, interpret)
     out = fn(jnp.asarray(a.block_rows), jnp.asarray(a.block_cols), blocks,
              dense)
@@ -261,7 +269,7 @@ def shard_spmm_batched_stream(a: BatchedBCSR, dense: jax.Array, *,
 
 def shard_spmm_batched(a: BatchedBCSR, dense: jax.Array, *,
                        mesh: Optional[Mesh] = None, bn: Optional[int] = None,
-                       out_dtype=jnp.float32,
+                       nt: Optional[int] = None, out_dtype=jnp.float32,
                        interpret: Optional[bool] = None) -> jax.Array:
     """C[b] = A[b] @ dense[b], batch dim partitioned across the mesh.
 
@@ -271,13 +279,14 @@ def shard_spmm_batched(a: BatchedBCSR, dense: jax.Array, *,
     numpy (empty-row padding), so call it eagerly; under jit use
     :func:`shard_spmm_batched_stream` on a pre-normalized stream."""
     a = spmm_ops.pad_empty_rows(a)
-    return shard_spmm_batched_stream(a, dense, mesh=mesh, bn=bn,
+    return shard_spmm_batched_stream(a, dense, mesh=mesh, bn=bn, nt=nt,
                                      out_dtype=out_dtype, interpret=interpret)
 
 
 def shard_spmm_batched_bucketed(a: BatchedBCSR, dense: jax.Array, *,
                                 mesh: Optional[Mesh] = None,
                                 bn: Optional[int] = None,
+                                nt: Optional[int] = None,
                                 min_bucket: int = 8,
                                 out_dtype=jnp.float32,
                                 interpret: Optional[bool] = None
@@ -288,7 +297,7 @@ def shard_spmm_batched_bucketed(a: BatchedBCSR, dense: jax.Array, *,
     programs (one per bucket) instead of one per count."""
     a = spmm_ops.pad_empty_rows(a)
     a = a.with_capacity(stream_bucket(a.nnzb, minimum=min_bucket))
-    return shard_spmm_batched_stream(a, dense, mesh=mesh, bn=bn,
+    return shard_spmm_batched_stream(a, dense, mesh=mesh, bn=bn, nt=nt,
                                      out_dtype=out_dtype, interpret=interpret)
 
 
@@ -297,9 +306,9 @@ def shard_spmm_batched_bucketed(a: BatchedBCSR, dense: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _sharded_spmspm_fn(mesh: Mesh, axis: str, rt: int, ct: int,
+def _sharded_spmspm_fn(mesh: Mesh, axis: str, rt: int, ct: int, nt: int,
                        out_dtype: str, interpret: bool):
-    kern = functools.partial(spmspm_ell, rt=rt, ct=ct,
+    kern = functools.partial(spmspm_ell, rt=rt, ct=ct, nt=nt,
                              out_dtype=jnp.dtype(out_dtype), interpret=interpret)
     return jax.jit(compat_shard_map(
         lambda ak, av, bk, bv: kern(ak, av, bk, bv),
@@ -312,12 +321,14 @@ def _sharded_spmspm_fn(mesh: Mesh, axis: str, rt: int, ct: int,
 
 def shard_spmspm(a_keys, a_vals, b_keys, b_vals, *,
                  mesh: Optional[Mesh] = None, rt: Optional[int] = None,
-                 ct: Optional[int] = None, out_dtype=jnp.float32,
+                 ct: Optional[int] = None, nt: Optional[int] = None,
+                 out_dtype=jnp.float32,
                  interpret: Optional[bool] = None) -> jax.Array:
     """Sharded sorted-stream intersection: A's row streams replicated, B's
     column streams partitioned; device d computes output columns of its B
-    stripe.  R is padded to ``rt`` and C to ``n_dev * ct`` (INVALID keys,
-    zero values -- they can never match) and both pads are stripped."""
+    stripe.  R is padded to ``rt`` and C to ``n_dev * nt * ct`` (INVALID
+    keys, zero values -- they can never match) and both pads are stripped.
+    ``nt`` is the per-device output-column residency width."""
     mesh, axis = auto_mesh(mesh)
     n_dev = mesh.shape[axis]
     interpret = _interpret_default(interpret)
@@ -328,10 +339,15 @@ def shard_spmspm(a_keys, a_vals, b_keys, b_vals, *,
         trt, tct = tuning.spmspm_tiles(R, max(1, C // n_dev), ak.shape[1],
                                        bk.shape[1], av.dtype)
         rt, ct = rt or trt, ct or tct
+    if nt is None:
+        nt = tuning.spmspm_nt(max(1, C // n_dev), ct, bk.shape[1], av.dtype)
+    elif int(nt) < 1:
+        raise ValueError(f"nt={nt} must be >= 1")
+    nt = int(nt)
     ak = _pad_dim(ak, 0, rt, value=INVALID_KEY)
     av = _pad_dim(av, 0, rt)
-    bk = _pad_dim(bk, 0, n_dev * ct, value=INVALID_KEY)
-    bv = _pad_dim(bv, 0, n_dev * ct)
-    fn = _sharded_spmspm_fn(mesh, axis, rt, ct, jnp.dtype(out_dtype).name,
+    bk = _pad_dim(bk, 0, n_dev * nt * ct, value=INVALID_KEY)
+    bv = _pad_dim(bv, 0, n_dev * nt * ct)
+    fn = _sharded_spmspm_fn(mesh, axis, rt, ct, nt, jnp.dtype(out_dtype).name,
                             interpret)
     return fn(ak, av, bk, bv)[:R, :C]

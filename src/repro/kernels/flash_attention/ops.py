@@ -1,4 +1,8 @@
-"""Public flash-attention API: padding, dtype policy, kernel dispatch."""
+"""Public flash-attention API: padding, dtype policy, kernel dispatch.
+
+Tile lengths default to the autotune table (``repro.kernels.tuning``, op
+``"flash"``) instead of hardcoded constants; pass ``bq=`` / ``bk=`` to
+override."""
 from __future__ import annotations
 
 import functools
@@ -6,21 +10,37 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import tuning
 from repro.kernels.flash_attention.kernel import flash_attention as _kernel
 from repro.kernels.flash_attention.ref import attention_ref
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
-                                             "interpret", "use_kernel"))
 def attention(q, k, v, *, causal: bool = True, window: int | None = None,
-              bq: int = 128, bk: int = 128, interpret: bool = False,
+              bq: int | None = None, bk: int | None = None,
+              interpret: bool = False,
               use_kernel: bool = True) -> jax.Array:
     """Streaming attention with GQA + causal/sliding-window masks.
 
     Pads Sq/Skv up to tile multiples; returns (B, Hq, Sq, D) in q.dtype.
+    ``bq=None`` / ``bk=None`` (default) consult the autotune table -- the
+    lookup happens *eagerly here*, outside the jitted body, so a
+    ``tuning.register`` (e.g. from a measured sweep) takes effect on the
+    next call instead of being baked into an already-compiled program.
     ``use_kernel=False`` routes to the jnp reference (used on backends where
     Pallas is unavailable and for A/B testing).
     """
+    if bq is None or bk is None:
+        Sq, D = q.shape[2], q.shape[3]
+        tbq, tbk = tuning.flash_tiles(Sq, k.shape[2], D, q.dtype)
+        bq, bk = bq or tbq, bk or tbk
+    return _attention_jit(q, k, v, causal=causal, window=window, bq=bq,
+                          bk=bk, interpret=interpret, use_kernel=use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret", "use_kernel"))
+def _attention_jit(q, k, v, *, causal, window, bq, bk, interpret,
+                   use_kernel):
     if not use_kernel:
         return attention_ref(q, k, v, causal=causal, window=window)
     B, Hq, Sq, D = q.shape

@@ -8,11 +8,21 @@ index stream literally steers the DMA engine one tile ahead of compute
 (``PrefetchScalarGridSpec``), while the MXU consumes (bm x bk) x (bk x bn)
 tiles back-to-back.
 
+Output residency (``nt``): the accumulator block is ``nt`` N-tiles wide --
+(bm, nt*bn) resident in VMEM -- and the grid walks the nonzero-block stream
+once per ``nt`` output tiles instead of once per tile.  The grid is
+(N / (nt*bn), nnzb, nt) with the sub-tile dim innermost: the A-block spec's
+index map is constant across the ``t`` steps, so the Pallas pipeline fetches
+each stream block ONCE per ``i`` while the dense operand keeps streaming one
+(bk, bn) K-tile per step (double-buffered by the pipeline, steered by the
+scalar-prefetched column index).  Stream re-reads drop from ``N/bn`` to
+``N/(nt*bn)`` -- Occamy's SPM-resident accumulation widened across the
+output row.
+
 Output revisiting: the block stream is sorted by block-row, so for a fixed
-N-tile the output block index is non-decreasing across the inner grid dim;
-Pallas keeps the accumulator tile resident in VMEM until the row changes
-(first-visit zeroing via ``pl.when``), mirroring Occamy's SPM-resident
-accumulation.
+N-supertile the output block index is non-decreasing across the inner grid
+dims; Pallas keeps the accumulator tile resident in VMEM until the row
+changes (first-visit zeroing via ``pl.when``).
 """
 from __future__ import annotations
 
@@ -24,56 +34,84 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _spmm_kernel(brows_ref, bcols_ref, blocks_ref, b_ref, o_ref):
-    i = pl.program_id(1)  # position in the nonzero-block stream (inner dim)
+def _spmm_kernel(brows_ref, bcols_ref, blocks_ref, b_ref, o_ref, *,
+                 bn: int, nt: int):
+    i = pl.program_id(1)  # position in the nonzero-block stream
+    t = pl.program_id(2)  # which resident N-subtile this step accumulates
     row = brows_ref[i]
     prev = brows_ref[jnp.maximum(i - 1, 0)]
 
-    @pl.when((i == 0) | (row != prev))
+    @pl.when(((i == 0) | (row != prev)) & (t == 0))
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
     a = blocks_ref[0]          # (bm, bk)
     b = b_ref[...]             # (bk, bn)
-    o_ref[...] += jnp.dot(
-        a, b, preferred_element_type=jnp.float32
-    ).astype(o_ref.dtype)
+    acc = jnp.dot(a, b, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+    if nt == 1:
+        o_ref[...] += acc
+    else:
+        # static unroll over the resident sub-tiles: exactly one branch fires
+        # per step, each with a static (lane-aligned) store offset.
+        for tt in range(nt):
+            @pl.when(t == tt)
+            def _acc(tt=tt):
+                o_ref[:, tt * bn:(tt + 1) * bn] += acc
 
 
 def spmm_bcsr(block_rows: jax.Array, block_cols: jax.Array, blocks: jax.Array,
               dense: jax.Array, *, n_block_rows: int, bn: int = 128,
-              out_dtype=jnp.float32, interpret: bool = False) -> jax.Array:
+              nt: int = 1, out_dtype=jnp.float32,
+              interpret: bool = False) -> jax.Array:
     """C = A @ dense where A is streamed as flattened BCSR blocks.
 
     Args:
       block_rows / block_cols: (nnzb,) int32, sorted by (row, col); every
         block-row must appear at least once (ops.py pads empty rows).
       blocks: (nnzb, bm, bk).
-      dense: (K, N) with K = n_block_cols * bk, N % bn == 0.
+      dense: (K, N) with K = n_block_cols * bk, N % (nt * bn) == 0.
       n_block_rows: number of block rows of A (static).
+      nt: output-residency width -- how many (bm, bn) N-tiles of the output
+        row stay VMEM-resident per stream walk (1 = the classic kernel).
     Returns:
       (n_block_rows * bm, N) in ``out_dtype``.
     """
     nnzb, bm, bk = blocks.shape
     K, N = dense.shape
-    assert N % bn == 0, (N, bn)
-    grid = (N // bn, nnzb)  # j outer, i inner: per-row accumulation contiguity
+    assert nt >= 1, nt
+    assert N % (nt * bn) == 0, (N, bn, nt)
+    # j outer (N-supertile), i middle (stream walk), t inner (resident
+    # sub-tile): per-row accumulation stays contiguous, and the A-block index
+    # map is constant in t so each stream block is DMA'd once per i.
+    grid = (N // (nt * bn), nnzb, nt)
 
+    kern = functools.partial(_spmm_kernel, bn=bn, nt=nt)
     return pl.pallas_call(
-        _spmm_kernel,
+        kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,  # block_rows, block_cols
             grid=grid,
             in_specs=[
-                # A-block stream: affine walk of the flattened block array.
-                pl.BlockSpec((1, bm, bk), lambda j, i, rows, cols: (i, 0, 0)),
+                # A-block stream: affine walk of the flattened block array;
+                # constant across t -> one fetch per stream position.
+                pl.BlockSpec((1, bm, bk),
+                             lambda j, i, t, rows, cols: (i, 0, 0)),
                 # Dense operand: the *indirect* stream -- block-col index
-                # steers which K-tile the DMA fetches (SU indirection).
-                pl.BlockSpec((bk, bn), lambda j, i, rows, cols: (cols[i], j)),
+                # steers which K-tile the DMA fetches (SU indirection); the
+                # pipeline double-buffers the next (bk, bn) tile while the
+                # MXU consumes the current one.
+                pl.BlockSpec((bk, bn),
+                             lambda j, i, t, rows, cols: (cols[i], j * nt + t)),
             ],
             out_specs=pl.BlockSpec(
-                (bm, bn), lambda j, i, rows, cols: (rows[i], j)),
+                (bm, nt * bn), lambda j, i, t, rows, cols: (rows[i], j)),
         ),
         out_shape=jax.ShapeDtypeStruct((n_block_rows * bm, N), out_dtype),
         interpret=interpret,
     )(block_rows, block_cols, blocks, dense)
+
+
+def stream_walks(n: int, bn: int, nt: int) -> int:
+    """How many times one call re-walks the index/block stream: the reread
+    factor ``ceil(N / (nt*bn))`` (1 == the whole stream is read once)."""
+    return -(-n // (nt * bn))

@@ -59,18 +59,20 @@ def pad_empty_rows(a: BCSR | BatchedBCSR):
     return BatchedBCSR(blocks=jnp.asarray(blocks[:, order]), **kw)
 
 
-@functools.partial(jax.jit, static_argnames=("n_block_rows", "bn", "out_dtype", "interpret"))
-def _spmm_jit(block_rows, block_cols, blocks, dense, *, n_block_rows, bn,
+@functools.partial(jax.jit, static_argnames=("n_block_rows", "bn", "nt",
+                                             "out_dtype", "interpret"))
+def _spmm_jit(block_rows, block_cols, blocks, dense, *, n_block_rows, bn, nt,
               out_dtype, interpret):
     return spmm_bcsr(block_rows, block_cols, blocks, dense,
-                     n_block_rows=n_block_rows, bn=bn, out_dtype=out_dtype,
-                     interpret=interpret)
+                     n_block_rows=n_block_rows, bn=bn, nt=nt,
+                     out_dtype=out_dtype, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("n_block_rows", "bn", "out_dtype", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n_block_rows", "bn", "nt",
+                                             "out_dtype", "interpret"))
 def _spmm_batched_jit(block_rows, block_cols, blocks, dense, *, n_block_rows,
-                      bn, out_dtype, interpret):
-    f = functools.partial(spmm_bcsr, n_block_rows=n_block_rows, bn=bn,
+                      bn, nt, out_dtype, interpret):
+    f = functools.partial(spmm_bcsr, n_block_rows=n_block_rows, bn=bn, nt=nt,
                           out_dtype=out_dtype, interpret=interpret)
     return jax.vmap(lambda bl, d: f(block_rows, block_cols, bl, d))(blocks, dense)
 
@@ -94,27 +96,48 @@ def _resolve_bn(bn, n, dtype, bk) -> int:
     return tuning.spmm_bn(n, dtype, bk=bk)
 
 
-def spmm(a: BCSR, dense: jax.Array, *, bn: int | None = None,
-         out_dtype=jnp.float32, interpret: bool = False) -> jax.Array:
-    """C = A @ dense. Pads N to a multiple of ``bn`` and strips it after.
+def _resolve_nt(nt, bn, n, dtype, bk) -> int:
+    """Resolve the output-residency width (how many N-tiles of one output
+    row stay VMEM-resident per stream walk).  An explicit ``nt`` must be a
+    positive int -- honored exactly; ``nt=None`` consults the autotune table
+    (shape/VMEM clamped)."""
+    if nt is not None:
+        nt = int(nt)
+        if nt < 1:
+            raise ValueError(f"nt={nt} must be >= 1")
+        return nt
+    # clamp the table's nt against the *resolved* bn (which may be an
+    # explicit override, not the table's own)
+    raw = int(tuning._row("spmm", dtype).get("nt", 1))
+    return tuning._clamp_nt(raw, bn, n, dtype, bk)
 
-    ``bn=None`` (default) consults the autotune table for the dtype/shape."""
+
+def spmm(a: BCSR, dense: jax.Array, *, bn: int | None = None,
+         nt: int | None = None, out_dtype=jnp.float32,
+         interpret: bool = False) -> jax.Array:
+    """C = A @ dense. Pads N to a multiple of ``nt * bn`` and strips after.
+
+    ``bn=None`` / ``nt=None`` (default) consult the autotune table for the
+    dtype/shape; ``nt`` is the output-residency width (the index/block
+    stream is re-walked ``ceil(N / (nt*bn))`` times)."""
     a = pad_empty_rows(a)
     K, N = dense.shape
     assert K == a.shape[1], (a.shape, dense.shape)
     bn = _resolve_bn(bn, N, dense.dtype, a.block[1])
-    n_pad = (-N) % bn
+    nt = _resolve_nt(nt, bn, N, dense.dtype, a.block[1])
+    n_pad = (-N) % (nt * bn)
     if n_pad:
         dense = jnp.pad(dense, ((0, 0), (0, n_pad)))
     gm, _ = a.grid_shape
     out = _spmm_jit(a.block_rows, a.block_cols, a.blocks, dense,
-                    n_block_rows=gm, bn=bn, out_dtype=out_dtype,
+                    n_block_rows=gm, bn=bn, nt=nt, out_dtype=out_dtype,
                     interpret=interpret)
     return out[:, :N] if n_pad else out
 
 
 def spmm_batched(a: BatchedBCSR, dense: jax.Array, *, bn: int | None = None,
-                 out_dtype=jnp.float32, interpret: bool = False) -> jax.Array:
+                 nt: int | None = None, out_dtype=jnp.float32,
+                 interpret: bool = False) -> jax.Array:
     """C[b] = A[b] @ dense[b] for a shared-index-stream batch.
 
     ``dense`` is (B, K, N), or (K, N) to broadcast one dense operand across
@@ -128,12 +151,13 @@ def spmm_batched(a: BatchedBCSR, dense: jax.Array, *, bn: int | None = None,
         a.shape, dense.shape)
     N = dense.shape[2]
     bn = _resolve_bn(bn, N, dense.dtype, a.block[1])
-    n_pad = (-N) % bn
+    nt = _resolve_nt(nt, bn, N, dense.dtype, a.block[1])
+    n_pad = (-N) % (nt * bn)
     if n_pad:
         dense = jnp.pad(dense, ((0, 0), (0, 0), (0, n_pad)))
     gm, _ = a.grid_shape
     out = _spmm_batched_jit(a.block_rows, a.block_cols, a.blocks, dense,
-                            n_block_rows=gm, bn=bn, out_dtype=out_dtype,
+                            n_block_rows=gm, bn=bn, nt=nt, out_dtype=out_dtype,
                             interpret=interpret)
     return out[..., :N] if n_pad else out
 

@@ -44,29 +44,37 @@ def _spmspm_kernel(ak_ref, av_ref, bk_ref, bv_ref, o_ref, *, rt, ct, la, lb):
 
 def spmspm_ell(a_keys: jax.Array, a_vals: jax.Array,
                b_keys: jax.Array, b_vals: jax.Array, *,
-               rt: int = 8, ct: int = 8, out_dtype=jnp.float32,
+               rt: int = 8, ct: int = 8, nt: int = 1, out_dtype=jnp.float32,
                interpret: bool = False) -> jax.Array:
     """C[r, c] = sum over key matches of A-row r and B-col c.
 
     a_keys/a_vals: (R, La) padded-ELL rows of A (keys ascending, INVALID pad).
     b_keys/b_vals: (C, Lb) padded-ELL *columns* of B.
+    ``nt``: output-column residency -- one grid step holds an (rt, nt*ct)
+    output tile resident and intersects against an (nt*ct, lb) B-stream
+    block, so the A row stream (the serial ``la`` walk) runs once per ``nt``
+    column tiles instead of once per tile.  Match accumulation per output
+    element is unchanged (the ``la`` fori order), so any ``nt`` is
+    bit-identical to ``nt=1``.
     Returns dense C (R, C); ``ops.py`` compacts to a sparse stream (the third
     SU's joint-index write-back).
     """
     R, la = a_keys.shape
     C, lb = b_keys.shape
-    assert R % rt == 0 and C % ct == 0, ((R, C), (rt, ct))
-    kern = functools.partial(_spmspm_kernel, rt=rt, ct=ct, la=la, lb=lb)
+    assert nt >= 1, nt
+    wct = nt * ct
+    assert R % rt == 0 and C % wct == 0, ((R, C), (rt, ct, nt))
+    kern = functools.partial(_spmspm_kernel, rt=rt, ct=wct, la=la, lb=lb)
     return pl.pallas_call(
         kern,
-        grid=(R // rt, C // ct),
+        grid=(R // rt, C // wct),
         in_specs=[
             pl.BlockSpec((rt, la), lambda i, j: (i, 0)),
             pl.BlockSpec((rt, la), lambda i, j: (i, 0)),
-            pl.BlockSpec((ct, lb), lambda i, j: (j, 0)),
-            pl.BlockSpec((ct, lb), lambda i, j: (j, 0)),
+            pl.BlockSpec((wct, lb), lambda i, j: (j, 0)),
+            pl.BlockSpec((wct, lb), lambda i, j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((rt, ct), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((rt, wct), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((R, C), out_dtype),
         interpret=interpret,
     )(a_keys, a_vals, b_keys, b_vals)

@@ -35,16 +35,20 @@ def dense_to_ell_cols(dense: np.ndarray, width: int | None = None):
     return dense_to_ell_rows(dense.T, width)
 
 
-@functools.partial(jax.jit, static_argnames=("rt", "ct", "interpret"))
-def _spmspm_jit(ak, av, bk, bv, *, rt, ct, interpret):
-    return spmspm_ell(ak, av, bk, bv, rt=rt, ct=ct, interpret=interpret)
+@functools.partial(jax.jit, static_argnames=("rt", "ct", "nt", "interpret"))
+def _spmspm_jit(ak, av, bk, bv, *, rt, ct, nt, interpret):
+    return spmspm_ell(ak, av, bk, bv, rt=rt, ct=ct, nt=nt,
+                      interpret=interpret)
 
 
 def spmspm(a_keys, a_vals, b_keys, b_vals, *, rt: int | None = None,
-           ct: int | None = None, interpret: bool = False) -> jax.Array:
+           ct: int | None = None, nt: int | None = None,
+           interpret: bool = False) -> jax.Array:
     """Dense-result SpMSpM over padded-ELL streams; pads R/C to tiles.
 
-    ``rt``/``ct`` default to the autotune table (repro.kernels.tuning)."""
+    ``rt``/``ct``/``nt`` default to the autotune table
+    (repro.kernels.tuning); ``nt`` is the output-column residency width (the
+    A row stream is walked once per ``nt`` column tiles)."""
     ak, av = jnp.asarray(a_keys), jnp.asarray(a_vals)
     bk, bv = jnp.asarray(b_keys), jnp.asarray(b_vals)
     R, C = ak.shape[0], bk.shape[0]
@@ -52,14 +56,20 @@ def spmspm(a_keys, a_vals, b_keys, b_vals, *, rt: int | None = None,
         trt, tct = tuning.spmspm_tiles(R, C, ak.shape[1], bk.shape[1],
                                        av.dtype)
         rt, ct = rt or trt, ct or tct
-    rp, cp = (-R) % rt, (-C) % ct
+    if nt is None:
+        nt = tuning.spmspm_nt(C, ct, bk.shape[1], av.dtype)
+    elif int(nt) < 1:
+        raise ValueError(f"nt={nt} must be >= 1")
+    nt = int(nt)
+    rp, cp = (-R) % rt, (-C) % (nt * ct)
     if rp:
         ak = jnp.pad(ak, ((0, rp), (0, 0)), constant_values=INVALID_KEY)
         av = jnp.pad(av, ((0, rp), (0, 0)))
     if cp:
         bk = jnp.pad(bk, ((0, cp), (0, 0)), constant_values=INVALID_KEY)
         bv = jnp.pad(bv, ((0, cp), (0, 0)))
-    out = _spmspm_jit(ak, av, bk, bv, rt=rt, ct=ct, interpret=interpret)
+    out = _spmspm_jit(ak, av, bk, bv, rt=rt, ct=ct, nt=nt,
+                      interpret=interpret)
     return out[:R, :C]
 
 

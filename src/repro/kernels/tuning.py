@@ -63,24 +63,31 @@ def _bucket(dtype) -> str:
 
 
 _TABLE: Dict[Tuple[str, str, str], Dict[str, Any]] = {
-    # SpMM: bn is the dense-operand N-tile.  Wider tiles amortize the
-    # per-step index-stream scalar read; narrower dtypes double the lane
-    # capacity so the same VMEM footprint covers 2x/4x the columns.
-    ("spmm", "f32", "tpu"): {"bn": 256},
-    ("spmm", "bf16", "tpu"): {"bn": 512},
-    ("spmm", "fp8", "tpu"): {"bn": 512},
-    ("spmm", "f32", "cpu"): {"bn": 128},
-    ("spmm", "bf16", "cpu"): {"bn": 128},
-    ("spmm", "fp8", "cpu"): {"bn": 128},
+    # SpMM: bn is the dense-operand N-tile; nt is the output-residency width
+    # (how many N-tiles of one output row stay VMEM-resident per walk of the
+    # index/block stream -- the stream reread factor is N / (nt*bn)).  Wider
+    # tiles amortize the per-step index-stream scalar read; narrower dtypes
+    # double the lane capacity so the same VMEM footprint covers 2x/4x the
+    # columns.  CPU/interpret rows pin nt=1: the grid is emulated serially,
+    # so residency buys nothing and only adds padding waste.
+    ("spmm", "f32", "tpu"): {"bn": 256, "nt": 4},
+    ("spmm", "bf16", "tpu"): {"bn": 512, "nt": 4},
+    ("spmm", "fp8", "tpu"): {"bn": 512, "nt": 4},
+    ("spmm", "f32", "cpu"): {"bn": 128, "nt": 1},
+    ("spmm", "bf16", "cpu"): {"bn": 128, "nt": 1},
+    ("spmm", "fp8", "cpu"): {"bn": 128, "nt": 1},
     # SpMSpM: (rt, ct) is the dense accumulator tile; the all-pairs compare
     # issues rt*ct*Lb comparisons per step, so bigger tiles raise comparator
-    # occupancy until the (rt, la) + (ct, lb) streams blow VMEM.
-    ("spmspm", "f32", "tpu"): {"rt": 16, "ct": 16},
-    ("spmspm", "bf16", "tpu"): {"rt": 16, "ct": 32},
-    ("spmspm", "fp8", "tpu"): {"rt": 16, "ct": 32},
-    ("spmspm", "f32", "cpu"): {"rt": 8, "ct": 8},
-    ("spmspm", "bf16", "cpu"): {"rt": 8, "ct": 8},
-    ("spmspm", "fp8", "cpu"): {"rt": 8, "ct": 8},
+    # occupancy until the (rt, la) + (ct, lb) streams blow VMEM.  nt widens
+    # the *output-column* residency: one kernel step computes (rt, nt*ct)
+    # against an (nt*ct, lb) B-stream block, walking the A row stream once
+    # per nt column tiles instead of once per tile.
+    ("spmspm", "f32", "tpu"): {"rt": 16, "ct": 16, "nt": 2},
+    ("spmspm", "bf16", "tpu"): {"rt": 16, "ct": 32, "nt": 2},
+    ("spmspm", "fp8", "tpu"): {"rt": 16, "ct": 32, "nt": 2},
+    ("spmspm", "f32", "cpu"): {"rt": 8, "ct": 8, "nt": 1},
+    ("spmspm", "bf16", "cpu"): {"rt": 8, "ct": 8, "nt": 1},
+    ("spmspm", "fp8", "cpu"): {"rt": 8, "ct": 8, "nt": 1},
     # MoE dispatch-as-SpMM (models.moe "bcsr" backend): ``block`` tiles the
     # 0/1 (slot, token) dispatch matrix -- small square blocks track the
     # one-nonzero-per-column structure; ``bn`` is the d_model N-tile of the
@@ -91,17 +98,37 @@ _TABLE: Dict[Tuple[str, str, str], Dict[str, Any]] = {
     # so the TPU row (compiles are expensive, streams are cheap) sits
     # higher than the CPU/interpret row.
     ("moe_dispatch", "f32", "tpu"): {"block": (8, 8), "bn": 256,
-                                     "min_bucket": 32},
+                                     "min_bucket": 32, "nt": 2},
     ("moe_dispatch", "bf16", "tpu"): {"block": (8, 8), "bn": 512,
-                                      "min_bucket": 32},
+                                      "min_bucket": 32, "nt": 2},
     ("moe_dispatch", "fp8", "tpu"): {"block": (8, 8), "bn": 512,
-                                     "min_bucket": 32},
+                                     "min_bucket": 32, "nt": 2},
     ("moe_dispatch", "f32", "cpu"): {"block": (8, 8), "bn": 128,
-                                     "min_bucket": 8},
+                                     "min_bucket": 8, "nt": 1},
     ("moe_dispatch", "bf16", "cpu"): {"block": (8, 8), "bn": 128,
-                                      "min_bucket": 8},
+                                      "min_bucket": 8, "nt": 1},
     ("moe_dispatch", "fp8", "cpu"): {"block": (8, 8), "bn": 128,
-                                     "min_bucket": 8},
+                                     "min_bucket": 8, "nt": 1},
+    # WKV: the chunk length of the VMEM-resident-state recurrence kernel
+    # (repro.kernels.wkv); longer chunks amortize the inter-chunk state
+    # handoff, shorter ones bound the (chunk, chunk) intra-chunk attention
+    # tile.  ops.wkv clamps to the (padded) sequence.
+    ("wkv", "f32", "tpu"): {"chunk": 128},
+    ("wkv", "bf16", "tpu"): {"chunk": 128},
+    ("wkv", "fp8", "tpu"): {"chunk": 128},
+    ("wkv", "f32", "cpu"): {"chunk": 128},
+    ("wkv", "bf16", "cpu"): {"chunk": 128},
+    ("wkv", "fp8", "cpu"): {"chunk": 128},
+    # Flash attention: (bq, bk) query/key tile lengths.  Wider KV tiles cut
+    # grid steps (fewer online-softmax rescales) until the double-buffered
+    # (bk, D) K/V streams pressure VMEM; narrow dtypes afford wider tiles.
+    # CPU rows keep the historical 128/128 (interpret mode, parity tests).
+    ("flash", "f32", "tpu"): {"bq": 128, "bk": 256},
+    ("flash", "bf16", "tpu"): {"bq": 128, "bk": 512},
+    ("flash", "fp8", "tpu"): {"bq": 128, "bk": 512},
+    ("flash", "f32", "cpu"): {"bq": 128, "bk": 128},
+    ("flash", "bf16", "cpu"): {"bq": 128, "bk": 128},
+    ("flash", "fp8", "cpu"): {"bq": 128, "bk": 128},
     # Stencil: per-ndim halo tiles; minor dim pinned to the 128 lane width.
     ("stencil2d", "f32", "tpu"): {"tile": (256, 256)},
     ("stencil2d", "bf16", "tpu"): {"tile": (256, 512)},
@@ -148,9 +175,33 @@ def _clamp_bn(bn: int, n: int, dtype, bk: int) -> int:
     return bn
 
 
+def _clamp_nt(nt: int, bn: int, n: int, dtype, bk: int) -> int:
+    """Clamp the SpMM output-residency width: the (bm-sublane, nt*bn) f32
+    accumulator plus the double-buffered (bk, bn) dense stream must fit the
+    VMEM budget, and a supertile wider than the whole (lane-aligned) operand
+    is pure padding."""
+    nt = max(1, int(nt))
+    n_aligned = -(-max(n, 1) // LANE) * LANE
+    while nt > 1 and (nt - 1) * bn >= n_aligned:
+        nt //= 2
+    while nt > 1 and (2 * bk * bn * _dtype_bytes(dtype)
+                      + 2 * SUBLANE * nt * bn * 4) > VMEM_BUDGET:
+        nt //= 2
+    return nt
+
+
 def spmm_bn(n: int, dtype=jnp.float32, *, bk: int = 8) -> int:
     """N-tile for the BCSR SpMM kernel (table row + shape/VMEM clamp)."""
     return _clamp_bn(int(_row("spmm", dtype)["bn"]), n, dtype, bk)
+
+
+def spmm_tiles(n: int, dtype=jnp.float32, *, bk: int = 8) -> Dict[str, int]:
+    """{"bn", "nt"} for the BCSR SpMM kernel: the N-tile plus the
+    output-residency width (how many N-tiles stay VMEM-resident per walk of
+    the index/block stream), both shape/VMEM clamped."""
+    row = _row("spmm", dtype)
+    bn = _clamp_bn(int(row["bn"]), n, dtype, bk)
+    return {"bn": bn, "nt": _clamp_nt(int(row.get("nt", 1)), bn, n, dtype, bk)}
 
 
 def spmspm_tiles(r: int, c: int, la: int, lb: int, dtype=jnp.float32
@@ -168,17 +219,56 @@ def spmspm_tiles(r: int, c: int, la: int, lb: int, dtype=jnp.float32
     return rt, ct
 
 
+def spmspm_nt(c: int, ct: int, lb: int, dtype=jnp.float32) -> int:
+    """Output-column residency width for the intersection kernel: one step
+    computes (rt, nt*ct) outputs from an (nt*ct, lb) B-stream block, so the
+    A row stream is walked once per ``nt`` column tiles.  Clamped so the
+    wider B block stays within the stream working-set budget."""
+    nt = max(1, int(_row("spmspm", dtype).get("nt", 1)))
+    c_aligned = -(-max(c, 1) // SUBLANE) * SUBLANE
+    while nt > 1 and (nt - 1) * ct >= c_aligned:
+        nt //= 2
+    while nt > 1 and 8 * nt * ct * lb > VMEM_BUDGET:
+        nt //= 2
+    return nt
+
+
 def moe_dispatch_tiles(d_model: int, dtype=jnp.float32) -> Dict[str, Any]:
-    """{"block": (bm, bk), "bn": int, "min_bucket": int} for the MoE
-    dispatch-as-SpMM path; ``bn`` (the d_model N-tile of the token operand)
-    gets the same shape/VMEM clamp as :func:`spmm_bn`; ``min_bucket`` feeds
+    """{"block": (bm, bk), "bn": int, "min_bucket": int, "nt": int} for the
+    MoE dispatch-as-SpMM path; ``bn`` (the d_model N-tile of the token
+    operand) gets the same shape/VMEM clamp as :func:`spmm_bn` and ``nt``
+    the residency clamp of :func:`spmm_tiles`; ``min_bucket`` feeds
     ``engine.stream_bucket`` when the routed stream is bucketed for the
     two-phase serving loop (rows registered without it fall back to 8)."""
     row = _row("moe_dispatch", dtype)
     bm, bk = row["block"]
-    return {"block": (int(bm), int(bk)),
-            "bn": _clamp_bn(int(row["bn"]), d_model, dtype, bk),
-            "min_bucket": int(row.get("min_bucket", 8))}
+    bn = _clamp_bn(int(row["bn"]), d_model, dtype, bk)
+    return {"block": (int(bm), int(bk)), "bn": bn,
+            "min_bucket": int(row.get("min_bucket", 8)),
+            "nt": _clamp_nt(int(row.get("nt", 1)), bn, d_model, dtype, bk)}
+
+
+def wkv_chunk(t: int, dtype=jnp.float32) -> int:
+    """Chunk length for the WKV recurrence kernel, clamped to the sequence
+    (the historical ``min(chunk, max(8, T))`` contract)."""
+    return min(int(_row("wkv", dtype)["chunk"]), max(SUBLANE, int(t)))
+
+
+def flash_tiles(sq: int, skv: int, d: int, dtype=jnp.float32
+                ) -> Tuple[int, int]:
+    """(bq, bk) tile lengths for the flash-attention kernel: no longer than
+    the (sublane-aligned) sequences, and bk halves while the double-buffered
+    K+V streams plus the f32 accumulator/softmax state would exceed the
+    VMEM budget (ops applies its divisibility-aware re-clamp on top)."""
+    row = _row("flash", dtype)
+    bq, bk = int(row["bq"]), int(row["bk"])
+    bq = min(bq, -(-max(sq, 1) // SUBLANE) * SUBLANE)
+    bk = min(bk, -(-max(skv, 1) // SUBLANE) * SUBLANE)
+    eb = _dtype_bytes(dtype)
+    while bk > LANE and (4 * bk * d * eb + bq * d * 4
+                         + 2 * bq * d * eb) > VMEM_BUDGET:
+        bk //= 2
+    return bq, bk
 
 
 def stencil_tile(interior: Tuple[int, ...], dtype=jnp.float32) -> Tuple[int, ...]:
@@ -198,14 +288,22 @@ def stencil_tile(interior: Tuple[int, ...], dtype=jnp.float32) -> Tuple[int, ...
 def lookup(op: str, *, dtype=jnp.float32, **shape) -> Dict[str, Any]:
     """Generic front door used by benchmarks / diagnostics."""
     if op == "spmm":
-        return {"bn": spmm_bn(shape.get("n", LANE), dtype,
-                              bk=shape.get("bk", SUBLANE))}
+        return spmm_tiles(shape.get("n", LANE), dtype,
+                          bk=shape.get("bk", SUBLANE))
     if op == "spmspm":
         rt, ct = spmspm_tiles(shape.get("r", SUBLANE), shape.get("c", SUBLANE),
                               shape.get("la", 1), shape.get("lb", 1), dtype)
-        return {"rt": rt, "ct": ct}
+        return {"rt": rt, "ct": ct,
+                "nt": spmspm_nt(shape.get("c", SUBLANE), ct,
+                                shape.get("lb", 1), dtype)}
     if op == "moe_dispatch":
         return moe_dispatch_tiles(shape.get("d_model", LANE), dtype)
+    if op == "wkv":
+        return {"chunk": wkv_chunk(shape.get("t", LANE), dtype)}
+    if op == "flash":
+        bq, bk = flash_tiles(shape.get("sq", LANE), shape.get("skv", LANE),
+                             shape.get("d", LANE), dtype)
+        return {"bq": bq, "bk": bk}
     if op == "stencil":
         return {"tile": stencil_tile(shape["interior"], dtype)}
     raise KeyError(f"unknown op {op!r}")

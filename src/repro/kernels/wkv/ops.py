@@ -1,4 +1,8 @@
-"""Public WKV-kernel API: padding + dispatch."""
+"""Public WKV-kernel API: padding + dispatch.
+
+The chunk length defaults to the autotune table (``repro.kernels.tuning``,
+op ``"wkv"``) instead of a hardcoded constant; pass ``chunk=`` to override.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,12 +10,24 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import tuning
 from repro.kernels.wkv.kernel import wkv_pallas
 
 
+def wkv(r, k, v, w_log, u, *, chunk: int | None = None,
+        interpret: bool = False):
+    """Pads T to a chunk multiple and runs the Pallas WKV kernel.
+
+    ``chunk=None`` (default) consults the autotune table for the dtype --
+    eagerly, outside the jitted body, so a later ``tuning.register`` is
+    honored instead of being baked into a compiled program."""
+    if chunk is None:
+        chunk = tuning.wkv_chunk(r.shape[1], r.dtype)
+    return _wkv_jit(r, k, v, w_log, u, chunk=int(chunk), interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def wkv(r, k, v, w_log, u, *, chunk: int = 128, interpret: bool = False):
-    """Pads T to a chunk multiple and runs the Pallas WKV kernel."""
+def _wkv_jit(r, k, v, w_log, u, *, chunk: int, interpret: bool):
     B, T, nh, hd = r.shape
     chunk = min(chunk, max(8, T))
     pad = (-T) % chunk

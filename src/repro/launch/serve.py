@@ -10,16 +10,20 @@ per-step stats.  Two modes:
   the loops differ at the *first* generated token: the old loop always
   argmaxed it, ServeLoop samples every generated token uniformly.)
 * **two-phase** (default when the arch has MoE layers and the "bcsr"
-  dispatch backend is selected) -- each decode step runs layer by layer
-  (`model.decode_step_layered`); at every attn+moe layer the loop *routes on
-  host* (``moe.route_moe``: compacts the dispatch matrix to its union
-  nonzero-block stream, padded to a power-of-two nnzb bucket) and then calls
-  the jit-compiled expert/combine phase (``moe.execute_moe_jit``) on that
-  static-bucketed stream.  Under the old single-phase loop, tracing forced
-  the bcsr stream back to the full ``E*C x T`` grid -- dense work through
-  the sparse engine; two-phase keeps the streamed blocks proportional to
-  what actually routed while recompiles stay bounded by the bucket count
-  (see tests/README.md "two-phase serving contract").
+  dispatch backend is selected) -- prefill AND each decode step run layer by
+  layer (`model.prefill_layered` / `model.decode_step_layered`, every layer
+  a cached jit-compiled step); at every attn+moe layer the loop *routes on
+  host* (``moe.route_moe``: jitted router matmul, then compacts the dispatch
+  matrix to its union nonzero-block stream, padded to a power-of-two nnzb
+  bucket) and then calls the jit-compiled expert/combine phase
+  (``moe.execute_moe_jit``) on that static-bucketed stream.  Under the old
+  single-phase loop, tracing forced the bcsr stream back to the full
+  ``E*C x T`` grid -- dense work through the sparse engine; two-phase keeps
+  the streamed blocks proportional to what actually routed while recompiles
+  stay bounded by the bucket count (see tests/README.md "two-phase serving
+  contract").  The only eager seams left in a decode step are the
+  intentional host routing yields -- everything else is a cached compiled
+  program.
 
 All timings block on device results (``jax.block_until_ready``) before
 reading the clock -- async dispatch otherwise makes tok/s meaningless.
@@ -114,12 +118,30 @@ class ServeLoop:
     def prefill(self, prompts: jax.Array,
                 embeddings: Optional[jax.Array] = None) -> jax.Array:
         """Run the prompt through the model, fill the decode cache, and
-        emit the first generated token (B, 1)."""
+        emit the first generated token (B, 1).
+
+        Resets the generation state up front: the two-phase moe stage
+        derives its step label from ``len(self.generated)``, which must
+        read -1 (prefill) here even when a previous ``run`` left tokens
+        behind.
+
+        In two-phase mode the prompt runs through the *layered* prefill
+        (``model.prefill_layered``) with the route->execute stage injected
+        at every attn+moe layer, so prefill streams the bucketed routed
+        dispatch stream too -- the fused ``model.prefill`` would trace the
+        bcsr dispatch back to the full ``E*C x T`` grid (the single-phase
+        fallback this loop exists to avoid)."""
+        self.generated = []
         t0 = time.monotonic()
-        with self._dispatch_ctx():
-            logits, cache, pos = M.prefill(self.params, prompts, self.cfg,
-                                           max_seq=self.max_seq,
-                                           embeddings=embeddings)
+        if self.two_phase:
+            logits, cache, pos = M.prefill_layered(
+                self.params, prompts, self.cfg, max_seq=self.max_seq,
+                embeddings=embeddings, moe_fn=self._moe_two_phase)
+        else:
+            with self._dispatch_ctx():
+                logits, cache, pos = M.prefill(self.params, prompts, self.cfg,
+                                               max_seq=self.max_seq,
+                                               embeddings=embeddings)
         logits, cache = jax.block_until_ready((logits, cache))
         self.stats.append(StepStat(
             "prefill", -1, time.monotonic() - t0,
@@ -205,9 +227,10 @@ class ServeLoop:
         """Aggregate per-phase seconds / counts for the last ``run``.
 
         Note the phases are NOT disjoint in two-phase mode: each "decode"
-        step stat times the whole layered step, *inclusive* of the
-        "route" / "execute" layer calls made inside it (those entries
-        break the step down; do not sum them with "decode")."""
+        step stat (and the "prefill" stat) times the whole layered pass,
+        *inclusive* of the "route" / "execute" layer calls made inside it
+        (those entries break the pass down; do not sum them with "decode"
+        or "prefill")."""
         out: Dict[str, Any] = {}
         for phase in ("prefill", "route", "execute", "decode"):
             ss = [s for s in self.stats if s.phase == phase]
@@ -282,7 +305,7 @@ def main():
     for phase in ("route", "execute"):
         if phase in s:
             print(f"{phase}:   {s[phase]['seconds']*1e3:.1f} ms over "
-                  f"{s[phase]['calls']} layer calls (within decode)")
+                  f"{s[phase]['calls']} layer calls (within prefill+decode)")
     if "stream" in s:
         st = s["stream"]
         print(f"stream:  nnzb {st['nnzb_stream_mean']:.1f} (bucketed) vs "

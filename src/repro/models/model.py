@@ -447,6 +447,95 @@ def decode_step(params: Params, cfg: ArchConfig, cache, pos, tokens_1,
     return (x @ unemb.astype(cd)).astype(jnp.float32), new_cache
 
 
+# --- cached jitted per-layer steps -------------------------------------------
+#
+# The layered decode/prefill paths below interleave *host* work (two-phase
+# MoE routing) between layers, which rules out one whole-model jit.  Running
+# every layer op-by-op instead taxes each decode step with hundreds of eager
+# dispatches (the PR-3 "host-dispatch tax").  Middle ground: one jitted
+# program per (cfg, layer kind) -- lru-cached here, while jit's own cache
+# keys the (x, cache, pos) *shapes* -- so a whole decode phase reuses a
+# handful of compiled programs and the only eager seams left are the
+# intentional host routing yields.
+
+@functools.lru_cache(maxsize=None)
+def _layer_decode_jit(cfg: ArchConfig, kind: str):
+    """Whole-layer one-token decode step (any kind; attn+moe dispatches its
+    MoE in-trace, i.e. without the two-phase host yield)."""
+    def fn(p, x, cache, pos):
+        if kind in ATTN_KINDS:
+            return _decode_block_attn(kind, p, x, cfg, cache, pos, None)
+        return apply_block(kind, p, x, cfg, cache=cache, pos=pos)
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _layer_decode_attn_head_jit(cfg: ArchConfig):
+    """The attention half of an attn+moe decode layer, up to the host MoE
+    yield: ln1 + attention + residual + ln2.  Returns (x_mid, h, new_attn).
+    attn+moe layers never use ring buffers (see _decode_block_attn)."""
+    def fn(p, x, attn_cache, pos):
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        a, new_attn = L.apply_attention(
+            p["attn"], h, cfg, window=None, impl="chunked", cache=attn_cache,
+            cache_len=pos, collect_kv=0)
+        x = x + a
+        h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        return x, h, new_attn
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _layer_prefill_jit(cfg: ArchConfig, kind: str, collect_kv: int,
+                       impl: str):
+    """Whole-layer prefill step (cache-collecting forward)."""
+    def fn(p, x):
+        return apply_block(kind, p, x, cfg, impl=impl, collect_kv=collect_kv)
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _layer_prefill_attn_head_jit(cfg: ArchConfig, kind: str, collect_kv: int,
+                                 impl: str):
+    """Prefill attention half of an attn+moe layer (up to the MoE yield)."""
+    def fn(p, x):
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        a, new_attn = L.apply_attention(
+            p["attn"], h, cfg, window=_window_for(kind, cfg), impl=impl,
+            cache=None, cache_len=None, collect_kv=collect_kv)
+        x = x + a
+        h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        return x, h, new_attn
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _final_logits_jit(cfg: ArchConfig, last_only: bool):
+    """final rmsnorm + unembed matmul as one program (``last_only`` takes
+    the trailing position first, the prefill contract)."""
+    def fn(norm_p, emb_or_unemb, x):
+        if last_only:
+            x = x[:, -1:]
+        x = L.rmsnorm(norm_p, x, cfg.norm_eps)
+        unemb = emb_or_unemb.T if cfg.tie_embeddings else emb_or_unemb
+        return (x @ unemb.astype(x.dtype)).astype(jnp.float32)
+    return jax.jit(fn)
+
+
+def _unemb_param(params: Params, cfg: ArchConfig):
+    return params["embed"] if cfg.tie_embeddings else params["unembed"]
+
+
+def _tree_take(tree, i):
+    """Slice index ``i`` off every leaf's leading (repeat) dim."""
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _tree_stack(per_step):
+    """Re-stack per-repeat cache trees along a new leading dim."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
+
+
 def decode_step_layered(params: Params, cfg: ArchConfig, cache, pos,
                         tokens_1, dtype=jnp.bfloat16, *, moe_fn=None
                         ) -> Tuple[jax.Array, Any]:
@@ -455,30 +544,42 @@ def decode_step_layered(params: Params, cfg: ArchConfig, cache, pos,
     Computes the same function as :func:`decode_step`, but layer by layer
     instead of one ``lax.scan`` -- which is what lets a serving loop
     interleave *host-side* work between layers: the two-phase MoE stage
-    (``launch.serve.ServeLoop``) routes each attn+moe layer eagerly and runs
+    (``launch.serve.ServeLoop``) routes each attn+moe layer on host and runs
     only the expert/combine phase compiled, something a scan body can never
-    yield back for.  ``moe_fn`` is threaded to every attn+moe block
-    (signature of ``moe.apply_moe``); ``pos`` should be concrete here (a
-    Python int) so host routing sees real positions.
+    yield back for.  Every layer runs as a cached jitted step
+    (:func:`_layer_decode_jit` / :func:`_layer_decode_attn_head_jit`, keyed
+    on (cfg, kind) here and on the x/cache shapes by jit itself), so the
+    host-dispatch tax is one call per layer, not one per op.  ``moe_fn`` is
+    threaded to every attn+moe block (signature of ``moe.apply_moe``);
+    ``pos`` should be concrete here (a Python int) so host routing sees real
+    positions -- it rides into the jitted steps as a traced scalar, so new
+    positions do NOT retrace.  ``dtype`` is accepted for signature parity
+    with :func:`decode_step` and (like there) unused: cache dtypes follow
+    the cache arrays themselves.
     """
     pol = precision_policy(cfg.policy)
     cd = pol.compute_dtype
     x = jnp.take(params["embed"], tokens_1, axis=0).astype(cd)
     shared_p = params.get("shared_attn")
     new_cache = dict(cache)
+    pos_t = jnp.asarray(pos, jnp.int32)  # traced side; host moe keeps `pos`
+    take, restack = _tree_take, _tree_stack
 
-    def take(tree, i):
-        return jax.tree.map(lambda a: a[i], tree)
-
-    def restack(per_step):
-        return jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
+    def layered_block(kind, p_i, x, c_i):
+        if kind == "attn+moe" and moe_fn is not None:
+            x, h, new_attn = _layer_decode_attn_head_jit(cfg)(
+                p_i, x, c_i["attn"], pos_t)
+            f, moe_counts = moe_fn(p_i["ffn"], h, cfg,
+                                   counts=c_i.get("moe"), pos=pos)
+            return x + f, {"attn": new_attn, "moe": moe_counts}
+        return _layer_decode_jit(cfg, kind)(p_i, x, c_i, pos_t)
 
     if "prologue" in params:
         pro = []
         for i in range(cfg.n_prologue):
-            x, nc = apply_block(cfg.block_unit[0], take(params["prologue"], i),
-                                x, cfg, cache=take(cache["prologue"], i),
-                                pos=pos, moe_fn=moe_fn)
+            x, nc = layered_block(cfg.block_unit[0],
+                                  take(params["prologue"], i), x,
+                                  take(cache["prologue"], i))
             pro.append(nc)
         new_cache["prologue"] = restack(pro)
 
@@ -488,18 +589,14 @@ def decode_step_layered(params: Params, cfg: ArchConfig, cache, pos,
         for slot, kind in enumerate(cfg.block_unit):
             p_i = take(params["blocks"][slot], i)
             c_i = take(cache["slots"][slot], i)
-            if kind in ATTN_KINDS:
-                x, nc = _decode_block_attn(kind, p_i, x, cfg, c_i, pos,
-                                           dtype, moe_fn=moe_fn)
-            else:
-                x, nc = apply_block(kind, p_i, x, cfg, cache=c_i, pos=pos)
+            x, nc = layered_block(kind, p_i, x, c_i)
             new_slots.append(nc)
         if cfg.shared_attn_every:
             c_i = take(cache["slots"][-1], i)
             # step index is concrete here, so the fire test is plain Python
             if (i % cfg.shared_attn_every) == (cfg.shared_attn_every - 1):
-                x, nc = _decode_block_attn("shared_attn", shared_p, x, cfg,
-                                           c_i, pos, dtype)
+                x, nc = _layer_decode_jit(cfg, "shared_attn")(
+                    shared_p, x, c_i, pos_t)
             else:
                 nc = c_i
             new_slots.append(nc)
@@ -508,6 +605,72 @@ def decode_step_layered(params: Params, cfg: ArchConfig, cache, pos,
         restack([step[s] for step in per_step])
         for s in range(len(per_step[0])))
 
-    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    unemb = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
-    return (x @ unemb.astype(cd)).astype(jnp.float32), new_cache
+    logits = _final_logits_jit(cfg, False)(params["final_norm"],
+                                           _unemb_param(params, cfg), x)
+    return logits, new_cache
+
+
+def prefill_layered(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
+                    max_seq: int, embeddings: Optional[jax.Array] = None,
+                    impl: str = "chunked", cache_dtype=jnp.bfloat16,
+                    moe_fn=None):
+    """Serving prefill, layer by layer: same function as :func:`prefill`
+    but with the repeat loop unrolled in Python so a serving loop can
+    interleave host work (two-phase MoE routing) between layers.  This is
+    what lets prefill ride the *bucketed routed stream* instead of tracing
+    the full ``E*C x T`` dispatch grid (the single-phase jit fallback).
+    Each layer runs as a cached jitted step; ``moe_fn`` (signature of
+    ``moe.apply_moe``) is injected at every attn+moe block with
+    ``counts=None, pos=None`` -- a fresh sequence at position 0, exactly the
+    fused prefill's routing state."""
+    pol = precision_policy(cfg.policy)
+    cd = pol.compute_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    if embeddings is not None:
+        x = jnp.concatenate([embeddings.astype(cd), x], axis=1)
+    S_total = x.shape[1]
+    shared_p = params.get("shared_attn")
+    cache: Dict[str, Any] = {}
+    take, restack = _tree_take, _tree_stack
+
+    def layered_block(kind, p_i, x):
+        if kind == "attn+moe" and moe_fn is not None:
+            x, h, new_attn = _layer_prefill_attn_head_jit(
+                cfg, kind, max_seq, impl)(p_i, x)
+            f, moe_counts = moe_fn(p_i["ffn"], h, cfg, counts=None, pos=None)
+            return x + f, {"attn": new_attn, "moe": moe_counts}
+        return _layer_prefill_jit(cfg, kind, max_seq, impl)(p_i, x)
+
+    if "prologue" in params:
+        pro = []
+        for i in range(cfg.n_prologue):
+            x, nc = layered_block(cfg.block_unit[0],
+                                  take(params["prologue"], i), x)
+            pro.append(nc)
+        cache["prologue"] = restack(pro)
+
+    per_step = []
+    for i in range(cfg.n_repeats):
+        new_slots = []
+        for slot, kind in enumerate(cfg.block_unit):
+            x, nc = layered_block(kind, take(params["blocks"][slot], i), x)
+            new_slots.append(nc)
+        if cfg.shared_attn_every:
+            # cache is collected every repeat (like the fused prefill); the
+            # residual only advances on fire steps
+            fire = (i % cfg.shared_attn_every) == (cfg.shared_attn_every - 1)
+            y2, c2 = _layer_prefill_jit(cfg, "shared_attn", max_seq,
+                                        impl)(shared_p, x)
+            if fire:
+                x = y2
+            new_slots.append(c2)
+        per_step.append(tuple(new_slots))
+    cache["slots"] = tuple(
+        restack([step[s] for step in per_step])
+        for s in range(len(per_step[0])))
+
+    logits = _final_logits_jit(cfg, True)(params["final_norm"],
+                                          _unemb_param(params, cfg), x)
+    cache = jax.tree.map(
+        lambda a: a.astype(cache_dtype) if a.dtype == cd else a, cache)
+    return logits, cache, jnp.asarray(S_total, jnp.int32)

@@ -187,6 +187,17 @@ def _dispatch_gather(xt: jax.Array, flat_slot: jax.Array, E: int, C: int):
     return xe.reshape(B, E, C, d).transpose(1, 0, 2, 3)
 
 
+def _dispatch_grid(S: int, E: int, C: int, bm: int, bk: int):
+    """The padded block geometry of the (slot, token) dispatch matrix:
+    (M, Mp, Sp, gm, gn).  Single source of truth shared by the traced
+    full-grid path and the routed-stream builder -- these two must agree or
+    the eager/traced/two-phase dispatch paths stop being bit-identical."""
+    M = E * C
+    Mp = -(-M // bm) * bm
+    Sp = -(-S // bk) * bk
+    return M, Mp, Sp, Mp // bm, Sp // bk
+
+
 def _dispatch_matrix_tiles(flat_slot: jax.Array, S: int, E: int, C: int,
                            bm: int, bk: int, dtype):
     """(bm, bk)-tiled 0/1 dispatch matrix for the bcsr backends.
@@ -195,10 +206,7 @@ def _dispatch_matrix_tiles(flat_slot: jax.Array, S: int, E: int, C: int,
     matrix per batch row, zero-padded to block multiples; dropped tokens
     write the slice-off row ``Mp`` so they vanish from every tile."""
     B = flat_slot.shape[0]
-    M = E * C
-    Mp = -(-M // bm) * bm
-    Sp = -(-S // bk) * bk
-    gm, gn = Mp // bm, Sp // bk
+    M, Mp, Sp, gm, gn = _dispatch_grid(S, E, C, bm, bk)
     rows = jnp.where(flat_slot < M, flat_slot, Mp)
     disp = jnp.zeros((B, Mp + 1, Sp), dtype)
     disp = disp.at[jnp.arange(B)[:, None], rows,
@@ -230,10 +238,7 @@ def _build_routed_stream(flat_slot, S: int, E: int, C: int, bm: int,
 
     fs = np.asarray(flat_slot)
     B = fs.shape[0]
-    M = E * C
-    Mp = -(-M // bm) * bm
-    Sp = -(-S // bk) * bk
-    gm, gn = Mp // bm, Sp // bk
+    M, Mp, Sp, gm, gn = _dispatch_grid(S, E, C, bm, bk)
     b_idx, s_idx = np.nonzero(fs < M)        # kept tokens (dropped = M)
     slots = fs[b_idx, s_idx]
     keys = (slots // bm).astype(np.int64) * gn + s_idx // bk
@@ -305,6 +310,7 @@ def _dispatch_bcsr(xt: jax.Array, flat_slot: jax.Array, E: int, C: int):
         Sp = ab.shape[2]
     xt_p = jnp.pad(xt, ((0, 0), (0, Sp - S), (0, 0)))
     out = engine.shard_spmm_batched(ab, xt_p, bn=tiles["bn"],
+                                    nt=tiles["nt"],
                                     out_dtype=xt.dtype)      # (B, Mp, d)
     return out[:, :M].reshape(B, E, C, d).transpose(1, 0, 2, 3)
 
@@ -321,6 +327,7 @@ def _dispatch_stream(xt: jax.Array, stream, E: int, C: int):
     tiles = tuning.moe_dispatch_tiles(d, xt.dtype)
     xt_p = jnp.pad(xt, ((0, 0), (0, Sp - S), (0, 0)))
     out = engine.shard_spmm_batched_stream(stream, xt_p, bn=tiles["bn"],
+                                           nt=tiles["nt"],
                                            out_dtype=xt.dtype)  # (B, Mp, d)
     M = E * C
     return out[:, :M].reshape(B, E, C, d).transpose(1, 0, 2, 3)
@@ -457,6 +464,21 @@ def _moe_tail(p, x, xe, gate, keep, flat_slot, cfg: ArchConfig, E: int,
 
 # ------------------------------------------------- two-phase serving API --
 
+@functools.partial(jax.jit, static_argnames=("cfg", "capacity"))
+def _route_phase1_jit(router, x, cfg: ArchConfig, counts, pos0, capacity):
+    """The compiled half of phase 1: router matmul + softmax/top-k + the
+    prefix-stable slot cumsums, one fused program instead of an op-by-op
+    eager chain.  ``pos0`` rides as a traced scalar so every decode step
+    reuses one compiled program; only the token shape and the static
+    dispatch capacity key the cache.  The host-side remainder of phase 1
+    (stream compaction) needs the *values*, which it reads off the returned
+    concrete arrays."""
+    r = route_tokens(router, x, cfg, counts=counts, pos0=pos0)
+    flat_slot = jnp.where(r.keep, r.expert_id * capacity + r.within,
+                          cfg.n_experts * capacity)
+    return r.gate, r.keep, r.new_counts, flat_slot
+
+
 @_pytree_dataclass(static=("capacity", "backend"))
 class MoEPlan:
     """Phase-1 output of the two-phase route-then-compile serving loop.
@@ -484,12 +506,14 @@ class MoEPlan:
 def route_moe(p, x, cfg: ArchConfig, *, counts: Optional[jax.Array] = None,
               pos=None, dispatch: Optional[str] = None,
               groups: Optional[int] = None) -> Tuple[MoEPlan, dict]:
-    """Phase 1: route eagerly, materialize the compacted dispatch stream.
+    """Phase 1: route on a *concrete* ``x``, materialize the dispatch stream.
 
-    Runs the (cheap, jittable-but-run-eager) router on a *concrete* ``x``
-    and, for the "bcsr" backend, compacts the 0/1 dispatch matrix to its
-    union nonzero-block stream on host -- the thing tracing fundamentally
-    cannot do, because data-dependent sparsity cannot produce static shapes.
+    The router matmul + slot cumsums run as one jit-compiled program
+    (:func:`_route_phase1_jit`; ``pos0`` traced, so a decode phase compiles
+    it once) and, for the "bcsr" backend, the 0/1 dispatch matrix is then
+    compacted to its union nonzero-block stream on host -- the thing tracing
+    fundamentally cannot do, because data-dependent sparsity cannot produce
+    static shapes.
     The stream is then padded to its power-of-two nnzb bucket
     (``engine.stream_bucket``, floor from the ``"moe_dispatch"`` autotune
     row), so the phase-2 compile cache sees a bounded set of stream shapes.
@@ -518,9 +542,12 @@ def route_moe(p, x, cfg: ArchConfig, *, counts: Optional[jax.Array] = None,
     _check_groups(B, cfg, groups or pctx.MOE_GROUPS, "route_moe")
 
     pos0 = 0 if pos is None else int(pos)  # concrete by contract
-    r = route_tokens(p["router"], x, cfg, counts=counts, pos0=pos0)
     C = dispatch_capacity(S, cfg, pos0=pos0)
-    flat_slot = jnp.where(r.keep, r.expert_id * C + r.within, E * C)
+    # router + slot assignment run as ONE jitted program (pos0 traced, so a
+    # whole decode phase reuses a single compile); the stream compaction
+    # below stays host-side -- it is the data-dependent step jit cannot do.
+    gate, keep, new_counts, flat_slot = _route_phase1_jit(
+        p["router"], x, cfg, counts, jnp.asarray(pos0, jnp.int32), C)
 
     stream = None
     info = {"backend": backend, "capacity": C, "tokens": S}
@@ -534,7 +561,7 @@ def route_moe(p, x, cfg: ArchConfig, *, counts: Optional[jax.Array] = None,
         info.update(nnzb_routed=nnzb_routed, nnzb_covered=nnzb_covered,
                     nnzb_stream=stream.nnzb, grid_nnzb=gm * gn,
                     bucket=stream.nnzb, block=(bm, bk))
-    plan = MoEPlan(gate=r.gate, keep=r.keep, new_counts=r.new_counts,
+    plan = MoEPlan(gate=gate, keep=keep, new_counts=new_counts,
                    flat_slot=flat_slot, stream=stream, capacity=C,
                    backend=backend)
     return plan, info

@@ -1,0 +1,56 @@
+"""Benchmark-harness smoke (the ``bench`` tier, enable with --run-bench).
+
+One tiny sweep point per op in interpret mode, so the ``sweep_tiles``
+harness (and its ``tuning.register`` wiring + JSON artifact schema) cannot
+bit-rot without CI noticing.  register=False keeps the process-global
+tuning table untouched for any tests that follow.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.bench
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def sweep_results():
+    sys.path.insert(0, REPO_ROOT)  # benchmarks/ is not a package on sys.path
+    try:
+        from benchmarks import sweep_tiles
+    finally:
+        sys.path.pop(0)
+    return sweep_tiles.run(smoke=True, register=False)
+
+
+def test_sweep_smoke_points_are_bit_identical(sweep_results):
+    spmm = sweep_results["spmm"]
+    assert spmm["points"], "sweep produced no points"
+    assert all(p["bit_identical"] for p in spmm["points"])
+    assert not spmm["registered"]
+    # the residency invariant: more resident tiles, fewer stream walks
+    by_nt = {p["nt"]: p["stream_walks"] for p in spmm["points"]
+             if p["bn"] == spmm["points"][0]["bn"]}
+    if len(by_nt) > 1:
+        assert by_nt[max(by_nt)] < by_nt[min(by_nt)]
+
+
+def test_sweep_smoke_bucket_points(sweep_results):
+    moe = sweep_results["moe_dispatch"]
+    assert moe["points"] and "min_bucket" in moe["winner"]
+    for p in moe["points"]:
+        assert p["nnzb_stream"] >= p["nnzb_covered"]
+
+
+def test_emit_bench_schema(tmp_path, sweep_results):
+    from benchmarks.common import emit_bench
+
+    path = emit_bench("smoke_test", sweep_results, directory=str(tmp_path))
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["bench"] == "smoke_test"
+    assert {"backend", "device_count", "jax_version"} <= set(doc)
+    assert doc["spmm"]["points"]

@@ -208,9 +208,12 @@ def test_tuning_alignment_invariants():
 
 
 def test_tuning_lookup_front_door():
-    assert set(tuning.lookup("spmm", n=256)) == {"bn"}
-    assert set(tuning.lookup("spmspm", r=16, c=16, la=8, lb=8)) == {"rt", "ct"}
+    assert set(tuning.lookup("spmm", n=256)) == {"bn", "nt"}
+    assert set(tuning.lookup("spmspm", r=16, c=16, la=8, lb=8)) == {
+        "rt", "ct", "nt"}
     assert set(tuning.lookup("stencil", interior=(32, 200))) == {"tile"}
+    assert set(tuning.lookup("wkv", t=256)) == {"chunk"}
+    assert set(tuning.lookup("flash", sq=256, skv=256, d=64)) == {"bq", "bk"}
     with pytest.raises(KeyError):
         tuning.lookup("nope")
 

@@ -78,14 +78,27 @@ def test_serve_loop_two_phase_token_parity(tiny_model):
     np.testing.assert_array_equal(got, want)
 
     s = loop.summary()
-    # every decode step routed + executed every attn+moe layer
+    # prefill AND every decode step routed + executed every attn+moe layer
+    # (prefill rides the layered bucketed-stream path too since PR 5)
     n_moe_layers = sum(k == "attn+moe" for k in TINY.block_unit) * TINY.n_repeats
-    assert s["route"]["calls"] == (GEN - 1) * n_moe_layers
+    assert s["route"]["calls"] == GEN * n_moe_layers
     assert s["execute"]["calls"] == s["route"]["calls"]
     # phase-2 compiles are keyed on the bucket: one signature for the whole
-    # single-token decode phase, never one per step
+    # single-token decode phase plus one for the prefill token shape, never
+    # one per step
     assert s["compile_signatures"] < s["execute"]["calls"]
-    assert s["compile_signatures"] <= 2
+    assert s["compile_signatures"] <= 3
+    prefill_routes = [st for st in loop.stats
+                      if st.phase == "route" and st.step == -1]
+    assert len(prefill_routes) == n_moe_layers  # prefill streamed, not grid
+
+    # a second run on the same loop resets generation state: its prefill
+    # routes are labeled step -1 again, not with the stale last step index
+    got2 = loop.run(prompts, GEN)
+    np.testing.assert_array_equal(got2, want)
+    prefill_routes2 = [st for st in loop.stats
+                       if st.phase == "route" and st.step == -1]
+    assert len(prefill_routes2) == n_moe_layers
     routes = [st for st in loop.stats if st.phase == "route"]
     for st in routes:
         assert st.extra["nnzb_stream"] <= max(
