@@ -1,0 +1,167 @@
+"""Continuous-batching serving benchmark: a synthetic many-user trace
+through ``launch.serve.ServeScheduler``.
+
+The serving analogue of Occamy keeping 48 clusters fed: the scheduler must
+keep the compiled two-phase hot path busy while the *population* of
+requests changes -- prompts of mixed length arrive over time, finished
+sequences evict between decode steps, queued prompts prefill into the
+freed slots.  What this measures (and records in ``BENCH_serve.json``):
+
+* **tok/s** of the batched decode phase (emitted tokens / decode seconds),
+  plus end-to-end wall time over the whole trace.
+* **per-token latency p50/p99** -- each generated token's latency is the
+  wall time of the step that emitted it (the prefill pass for a request's
+  first token, the shared batched decode step after), so the percentiles
+  reflect what a *user* of the multi-tenant frontend sees, including the
+  steps where their token shared the batch with other tenants' work.
+* **first-token latency p50/p99** -- submit-to-first-token, queueing
+  included.
+* **recompile accounting** -- the distinct batch buckets and (two-phase)
+  nnzb buckets observed, and the phase-2 compile-signature count, which
+  the batch-bucket x nnzb-bucket law bounds (asserted by the bench-tier
+  smoke test, ``tests/test_bench_smoke.py``).
+
+Run modes:
+  python benchmarks/bench_serve.py                 # smoke-scout trace
+  python benchmarks/bench_serve.py --smoke         # tiny config, CI guard
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit_bench, row
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.launch.serve import ServeScheduler
+
+# tiny attn+moe config for --smoke: seconds on interpret-mode CPU
+TINY = ArchConfig(
+    name="tiny-serve-bench", family="moe", d_model=32, n_heads=2,
+    n_kv_heads=1, d_ff=48, vocab_size=64, block_unit=("attn", "attn+moe"),
+    n_repeats=2, head_dim=16, n_experts=4, top_k=1, capacity_factor=1.0,
+    moe_shared_expert=True, policy="f32")
+
+
+def synth_trace(n_requests: int, *, prompt_lo: int, prompt_hi: int,
+                gen_lo: int, gen_hi: int, vocab: int, arrival_every: int,
+                seed: int = 0) -> List[Tuple[int, np.ndarray, int]]:
+    """A deterministic many-user trace: ``n_requests`` requests with
+    uniformly mixed prompt/generation lengths, arriving in pairs every
+    ``arrival_every`` scheduler steps (so the batch composition keeps
+    changing mid-flight).  Returns (arrival_step, prompt, max_new) tuples
+    sorted by arrival."""
+    rng = np.random.default_rng(seed)
+    trace = []
+    for i in range(n_requests):
+        plen = int(rng.integers(prompt_lo, prompt_hi + 1))
+        gen = int(rng.integers(gen_lo, gen_hi + 1))
+        prompt = rng.integers(0, vocab, plen).astype(np.int32)
+        trace.append(((i // 2) * arrival_every, prompt, gen))
+    return trace
+
+
+def drive(sched: ServeScheduler,
+          trace: List[Tuple[int, np.ndarray, int]]) -> dict:
+    """Feed the trace into the scheduler at its arrival steps and run to
+    drain; returns the scheduler summary + trace-level aggregates."""
+    import time
+
+    pending = sorted(trace, key=lambda t: t[0])
+    t0 = time.monotonic()
+    while pending or sched.has_work():
+        while pending and pending[0][0] <= sched.step_idx:
+            _, prompt, gen = pending.pop(0)
+            sched.submit(prompt, gen)
+        sched.step()
+    wall = time.monotonic() - t0
+    s = sched.summary()
+    s["trace"] = {
+        "requests": len(trace),
+        "steps": sched.step_idx,
+        "wall_seconds": wall,
+        "prompt_tokens": int(sum(len(p) for _, p, _ in trace)),
+        "generated_tokens": int(sum(len(r.tokens) for r in sched.finished)),
+    }
+    return s
+
+
+def run(*, smoke: bool = False, dispatch: Optional[str] = None) -> dict:
+    """The benchmark body; importable by the bench-tier smoke test."""
+    if smoke:
+        cfg, max_seq, slots = TINY, 24, 2
+        trace_kw = dict(n_requests=6, prompt_lo=4, prompt_hi=8, gen_lo=3,
+                        gen_hi=6, vocab=cfg.vocab_size, arrival_every=2)
+    else:
+        from repro.configs import get_smoke
+        cfg = get_smoke("llama4-scout-17b-a16e")
+        max_seq, slots = 48, 4
+        trace_kw = dict(n_requests=12, prompt_lo=8, prompt_hi=24, gen_lo=8,
+                        gen_hi=16, vocab=cfg.vocab_size, arrival_every=3)
+    if dispatch is not None:
+        cfg = dataclasses.replace(cfg, moe_dispatch=dispatch)
+
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    out = {"config": {"arch": cfg.name, "max_seq": max_seq, "slots": slots,
+                      **{k: v for k, v in trace_kw.items() if k != "vocab"}}}
+    for backend in ("gather", "bcsr"):
+        sched = ServeScheduler(params, cfg, max_seq=max_seq,
+                               max_slots=slots, dispatch=backend)
+        s = drive(sched, synth_trace(**trace_kw))
+        bound = len(s["batch_buckets"]) if sched.two_phase else None
+        entry = {
+            "two_phase": sched.two_phase,
+            "decode_tok_per_s": s.get("decode", {}).get("tok_per_s", 0.0),
+            "token_latency_ms": s["token_latency_ms"],
+            "first_token_ms": s["first_token_ms"],
+            "batch_buckets": s["batch_buckets"],
+            "trace": s["trace"],
+            "requests_finished": s["requests"]["finished"],
+        }
+        if sched.two_phase:
+            # the bucket law: phase-2 signatures are bounded by the product
+            # of observed batch buckets, nnzb buckets, and token shapes
+            # (decode S=1 + one per distinct prompt length)
+            prompt_shapes = len({len(p) for _, p, _ in
+                                 synth_trace(**trace_kw)}) + 1
+            entry.update(
+                nnzb_buckets=s["nnzb_buckets"],
+                compile_signatures=s["compile_signatures"],
+                signature_bound=(len(s["batch_buckets"]) + 1)
+                * max(1, len(s["nnzb_buckets"])) * prompt_shapes)
+        out[backend] = entry
+    return out
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--dispatch", choices=["gather", "bcsr"], default=None)
+    args = ap.parse_args()
+
+    payload = run(smoke=args.smoke, dispatch=args.dispatch)
+    for backend in ("gather", "bcsr"):
+        e = payload[backend]
+        lat = e["token_latency_ms"]
+        print(row(f"serve/{backend}/decode_tok_per_s",
+                  e["decode_tok_per_s"],
+                  f"two_phase={e['two_phase']}"))
+        print(row(f"serve/{backend}/token_latency_p50_ms", lat["p50"],
+                  f"p99={lat['p99']:.1f};n={lat['n']}"))
+        if "compile_signatures" in e:
+            print(row(f"serve/{backend}/compile_signatures",
+                      e["compile_signatures"],
+                      f"bound={e['signature_bound']};"
+                      f"batch_buckets={e['batch_buckets']};"
+                      f"nnzb_buckets={e['nnzb_buckets']}"))
+    path = emit_bench("serve", payload)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -152,6 +152,19 @@ def stream_bucket(nnzb: int, *, minimum: int = 8) -> int:
     return 1 << (n - 1).bit_length()
 
 
+def batch_bucket(n: int, *, minimum: int = 1, cap: Optional[int] = None) -> int:
+    """The stream-bucket law applied to the *batch* dimension.
+
+    Continuous-batching serving (``launch.serve.ServeScheduler``) runs each
+    decode step at ``batch_bucket(active_rows)`` so batch-composition
+    changes (join/evict between steps) hit a bounded set of compiled step
+    shapes -- one per power-of-two bucket -- instead of one per occupancy
+    count.  ``cap`` clamps to the allocated slot count (itself bucketed at
+    allocation time, so the clamp never produces a non-bucket shape)."""
+    b = stream_bucket(n, minimum=minimum)
+    return min(b, cap) if cap is not None else b
+
+
 def _pad_dim(x: jax.Array, dim: int, multiple: int, value=0) -> jax.Array:
     pad = (-x.shape[dim]) % multiple
     if not pad:

@@ -1,52 +1,67 @@
-"""Serving launcher: a reusable two-phase route-then-compile serving loop.
+"""Serving launcher: two-phase route-then-compile serving, single-run and
+continuous-batching multi-tenant.
 
-:class:`ServeLoop` drives prefill -> [route -> execute] -> decode with
-per-step stats.  Two modes:
+Two drivers share one phase machinery (:class:`_ServeBase`):
 
-* **fused** (default for gather dispatch) -- the whole one-token decode step
-  is one jit-compiled program (`model.decode_step`), the classic serving
-  loop.  This is also the mode the old smoke loop ran; greedy (temperature
-  0) decoding is token-for-token identical to it.  (With temperature > 0
-  the loops differ at the *first* generated token: the old loop always
-  argmaxed it, ServeLoop samples every generated token uniformly.)
-* **two-phase** (default when the arch has MoE layers and the "bcsr"
-  dispatch backend is selected) -- prefill AND each decode step run layer by
-  layer (`model.prefill_layered` / `model.decode_step_layered`, every layer
-  a cached jit-compiled step); at every attn+moe layer the loop *routes on
-  host* (``moe.route_moe``: jitted router matmul, then compacts the dispatch
-  matrix to its union nonzero-block stream, padded to a power-of-two nnzb
-  bucket) and then calls the jit-compiled expert/combine phase
-  (``moe.execute_moe_jit``) on that static-bucketed stream.  Under the old
-  single-phase loop, tracing forced the bcsr stream back to the full
-  ``E*C x T`` grid -- dense work through the sparse engine; two-phase keeps
-  the streamed blocks proportional to what actually routed while recompiles
-  stay bounded by the bucket count (see tests/README.md "two-phase serving
-  contract").  The only eager seams left in a decode step are the
-  intentional host routing yields -- everything else is a cached compiled
-  program.
+* :class:`ServeLoop` -- the static-batch driver: one prefill over a fixed
+  (B, S) prompt batch, then lockstep decode.  Two modes:
+
+  * **fused** (default for gather dispatch) -- the whole one-token decode
+    step is one jit-compiled program (`model.decode_step`), the classic
+    serving loop.  Greedy (temperature 0) decoding is token-for-token
+    identical to the pre-ServeLoop smoke loop.
+  * **two-phase** (default when the arch has MoE layers and the "bcsr"
+    dispatch backend is selected) -- prefill AND each decode step run layer
+    by layer (`model.prefill_layered` / `model.decode_step_layered`, every
+    layer a cached jit-compiled step); at every attn+moe layer the loop
+    *routes on host* (``moe.route_moe``: jitted router matmul, then
+    compacts the dispatch matrix to its union nonzero-block stream, padded
+    to a power-of-two nnzb bucket) and then calls the jit-compiled
+    expert/combine phase (``moe.execute_moe_jit``) on that static-bucketed
+    stream.  Recompiles stay bounded by the bucket count (see
+    tests/README.md "two-phase serving contract").
+
+* :class:`ServeScheduler` -- the continuous-batching frontend: a request
+  queue with admission, join/evict *between decode steps* (finished or
+  EOS'd sequences free their slot, queued prompts prefill into it), and
+  per-request position / routing-occupancy / sampling state carried
+  through the batch dim of the prefix-stable decode cache.  Decode steps
+  run at a power-of-two *batch bucket* (``engine.batch_bucket`` -- the
+  PR-3 nnzb bucket law extended to the batch dimension), so batch
+  composition changes never retrace: compiled-step shapes are bounded by
+  (batch buckets x nnzb buckets).  Per request the generated tokens are
+  token-identical to running that request alone through a sequential
+  :class:`ServeLoop` (enforced by tests/test_serve_scheduler.py) -- every
+  per-row computation (attention at per-row positions, prefix-stable MoE
+  occupancy, sampling keys) is independent of which neighbours share the
+  batch.
 
 All timings block on device results (``jax.block_until_ready``) before
-reading the clock -- async dispatch otherwise makes tok/s meaningless.
+reading the clock -- async dispatch otherwise makes tok/s meaningless --
+and *drain* pending device work before starting a phase clock, so queued
+compute from the previous phase is never misattributed.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --smoke \
       --batch 4 --prompt-len 32 --gen 32
   PYTHONPATH=src python -m repro.launch.serve --arch llama4-scout-17b-a16e \
-      --smoke --dispatch bcsr --gen 16
+      --smoke --dispatch bcsr --gen 16 --continuous --requests 6
 """
 from __future__ import annotations
 
 import argparse
+import collections
 import contextlib
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke
+from repro.kernels import engine
 from repro.models import model as M
 from repro.models import moe
 from repro.parallel import context as pctx
@@ -63,7 +78,114 @@ class StepStat:
     extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
-class ServeLoop:
+def _percentiles_ms(seconds: List[float]) -> Dict[str, float]:
+    """p50/p99/mean of a latency sample, in milliseconds."""
+    if not seconds:
+        return {"p50": 0.0, "p99": 0.0, "mean": 0.0, "n": 0}
+    a = np.asarray(seconds, np.float64) * 1e3
+    return {"p50": float(np.percentile(a, 50)),
+            "p99": float(np.percentile(a, 99)),
+            "mean": float(a.mean()), "n": int(a.size)}
+
+
+class _ServeBase:
+    """Phase machinery shared by the static-batch :class:`ServeLoop` and the
+    continuous-batching :class:`ServeScheduler`: dispatch-backend selection,
+    the two-phase route->execute MoE stage with honest per-phase timing, and
+    the phase-2 compile-signature accounting."""
+
+    def __init__(self, params, cfg, *, dispatch: Optional[str] = None,
+                 two_phase: Optional[bool] = None, temperature: float = 0.0,
+                 sample_seed: int = 3):
+        self.params, self.cfg = params, cfg
+        self.backend = dispatch or cfg.moe_dispatch
+        has_moe = any(k == "attn+moe" for k in cfg.block_unit)
+        self.two_phase = ((self.backend == "bcsr" and has_moe)
+                          if two_phase is None else two_phase)
+        self.temperature = temperature
+        self._sample_seed = sample_seed
+        self._sample_key = jax.random.PRNGKey(sample_seed)
+        self.stats: List[StepStat] = []
+        self._exec_keys: set = set()   # distinct phase-2 compile signatures
+
+    # ------------------------------------------------------------- phases --
+
+    def _step_label(self) -> int:
+        """Decode step index for phase stats (-1 = prefill)."""
+        raise NotImplementedError
+
+    @contextlib.contextmanager
+    def _dispatch_ctx(self):
+        """Trace-time backend override for the fused (in-jit) paths.
+
+        Touches ONLY ``MOE_DISPATCH`` -- an ambient ``activation_specs``
+        context (mesh, EP/combine layout constraints, dispatch groups) must
+        survive into the trace, so this cannot re-enter that manager (which
+        resets every global it does not receive)."""
+        prev = pctx.MOE_DISPATCH
+        pctx.MOE_DISPATCH = self.backend
+        try:
+            yield
+        finally:
+            pctx.MOE_DISPATCH = prev
+
+    def _moe_two_phase(self, p_ffn, h, cfg, counts=None, pos=None):
+        """The route -> execute stage injected at every attn+moe layer.
+
+        The drain on ``h`` happens BEFORE the route clock starts: ``h`` is
+        the async result of the attention half of the layer, and blocking on
+        it inside the timer would charge that queued device compute to
+        "route" (the pre-PR-6 misattribution), poisoning per-phase stats and
+        any latency percentile built on them."""
+        h = jax.block_until_ready(h)
+        t0 = time.monotonic()
+        plan, info = moe.route_moe(p_ffn, h, cfg, counts=counts, pos=pos,
+                                   dispatch=self.backend)
+        step = self._step_label()
+        self.stats.append(StepStat("route", step, time.monotonic() - t0,
+                                   tokens=h.shape[0] * h.shape[1],
+                                   extra=dict(info)))
+        sig = (plan.capacity, plan.backend, tuple(h.shape),
+               None if plan.stream is None
+               else (plan.stream.nnzb,) + tuple(plan.stream.shape))
+        self._exec_keys.add(sig)
+        t0 = time.monotonic()
+        out, new_counts = moe.execute_moe_jit(p_ffn, h, plan, cfg)
+        out = jax.block_until_ready(out)
+        self.stats.append(StepStat(
+            "execute", step, time.monotonic() - t0,
+            tokens=h.shape[0] * h.shape[1],
+            extra={"nnzb_stream": info.get("nnzb_stream"),
+                   "compile_signatures": len(self._exec_keys)}))
+        return out, new_counts
+
+    def _phase_summary(self) -> Dict[str, Any]:
+        """Aggregate per-phase seconds / call counts.  The phases are NOT
+        disjoint in two-phase mode: each "decode" step stat (and every
+        "prefill" stat) times the whole layered pass, *inclusive* of the
+        "route" / "execute" layer calls made inside it."""
+        out: Dict[str, Any] = {}
+        for phase in ("prefill", "route", "execute", "decode"):
+            ss = [s for s in self.stats if s.phase == phase]
+            if ss:
+                out[phase] = {"seconds": sum(s.seconds for s in ss),
+                              "calls": len(ss)}
+        if self.two_phase:
+            routes = [s for s in self.stats if s.phase == "route"
+                      and "nnzb_stream" in s.extra]
+            if routes:
+                out["stream"] = {
+                    "nnzb_stream_mean": float(np.mean(
+                        [s.extra["nnzb_stream"] for s in routes])),
+                    "nnzb_routed_mean": float(np.mean(
+                        [s.extra["nnzb_routed"] for s in routes])),
+                    "grid_nnzb": routes[-1].extra["grid_nnzb"],
+                }
+            out["compile_signatures"] = len(self._exec_keys)
+        return out
+
+
+class ServeLoop(_ServeBase):
     """Batched greedy/temperature serving loop with KV caches.
 
     Parameters
@@ -83,15 +205,9 @@ class ServeLoop:
                  dispatch: Optional[str] = None,
                  two_phase: Optional[bool] = None,
                  temperature: float = 0.0, sample_seed: int = 3):
-        self.params, self.cfg, self.max_seq = params, cfg, max_seq
-        self.backend = dispatch or cfg.moe_dispatch
-        has_moe = any(k == "attn+moe" for k in cfg.block_unit)
-        self.two_phase = ((self.backend == "bcsr" and has_moe)
-                          if two_phase is None else two_phase)
-        self.temperature = temperature
-        self.stats: List[StepStat] = []
-        self._exec_keys: set = set()   # distinct phase-2 compile signatures
-        self._sample_key = jax.random.PRNGKey(sample_seed)
+        super().__init__(params, cfg, dispatch=dispatch, two_phase=two_phase,
+                         temperature=temperature, sample_seed=sample_seed)
+        self.max_seq = max_seq
         self._decode_fused = jax.jit(
             lambda p, c, pos, tok: M.decode_step(p, cfg, c, pos, tok))
         self.cache = None
@@ -100,20 +216,8 @@ class ServeLoop:
 
     # ------------------------------------------------------------- phases --
 
-    @contextlib.contextmanager
-    def _dispatch_ctx(self):
-        """Trace-time backend override for the fused (in-jit) paths.
-
-        Touches ONLY ``MOE_DISPATCH`` -- an ambient ``activation_specs``
-        context (mesh, EP/combine layout constraints, dispatch groups) must
-        survive into the trace, so this cannot re-enter that manager (which
-        resets every global it does not receive)."""
-        prev = pctx.MOE_DISPATCH
-        pctx.MOE_DISPATCH = self.backend
-        try:
-            yield
-        finally:
-            pctx.MOE_DISPATCH = prev
+    def _step_label(self) -> int:
+        return len(self.generated) - 1
 
     def prefill(self, prompts: jax.Array,
                 embeddings: Optional[jax.Array] = None) -> jax.Array:
@@ -160,36 +264,21 @@ class ServeLoop:
             nxt = jnp.argmax(lg, axis=-1)
         return nxt[:, None].astype(jnp.int32)
 
-    def _moe_two_phase(self, p_ffn, h, cfg, counts=None, pos=None):
-        """The route -> execute stage injected at every attn+moe layer."""
-        t0 = time.monotonic()
-        h = jax.block_until_ready(h)
-        plan, info = moe.route_moe(p_ffn, h, cfg, counts=counts, pos=pos,
-                                   dispatch=self.backend)
-        step = len(self.generated) - 1
-        self.stats.append(StepStat("route", step, time.monotonic() - t0,
-                                   tokens=h.shape[0] * h.shape[1],
-                                   extra=dict(info)))
-        sig = (plan.capacity, plan.backend, tuple(h.shape),
-               None if plan.stream is None
-               else (plan.stream.nnzb,) + tuple(plan.stream.shape))
-        self._exec_keys.add(sig)
-        t0 = time.monotonic()
-        out, new_counts = moe.execute_moe_jit(p_ffn, h, plan, cfg)
-        out = jax.block_until_ready(out)
-        self.stats.append(StepStat(
-            "execute", step, time.monotonic() - t0,
-            tokens=h.shape[0] * h.shape[1],
-            extra={"nnzb_stream": info.get("nnzb_stream"),
-                   "compile_signatures": len(self._exec_keys)}))
-        return out, new_counts
-
     def decode_step(self) -> jax.Array:
         """Generate one token for every sequence in the batch."""
         if self.cache is None:
             raise RuntimeError("decode_step before prefill")
         step = len(self.generated) - 1
         pos = self.pos + step
+        if pos >= self.max_seq:
+            # XLA clamps the out-of-bounds dynamic_update_slice instead of
+            # failing, which would silently overwrite the LAST cache slot
+            # every further step -- garbage tokens, no error.  Refuse.
+            raise RuntimeError(
+                f"ServeLoop.decode_step: KV-cache overflow -- decode write "
+                f"position {pos} >= max_seq {self.max_seq} "
+                f"(prefill filled {self.pos}, this is generated token "
+                f"{step + 2}). Raise max_seq or generate fewer tokens.")
         tok = self.generated[-1]
         t0 = time.monotonic()
         if self.two_phase:
@@ -215,10 +304,19 @@ class ServeLoop:
     # -------------------------------------------------------------- drive --
 
     def run(self, prompts: jax.Array, gen: int,
-            embeddings: Optional[jax.Array] = None) -> np.ndarray:
-        """prefill + (gen - 1) decode steps; returns (B, gen) token ids."""
+            embeddings: Optional[jax.Array] = None,
+            sample_key: Optional[jax.Array] = None) -> np.ndarray:
+        """prefill + (gen - 1) decode steps; returns (B, gen) token ids.
+
+        Every ``run`` starts from a *fresh* sampling key -- reseeded from
+        the constructor's ``sample_seed`` (or ``sample_key`` when given) --
+        so consecutive runs with ``temperature > 0`` are reproducible:
+        before PR 6 the key advanced silently across runs, making every
+        ``run()`` after the first irreproducible."""
         self.stats.clear()
         self._exec_keys.clear()
+        self._sample_key = (jax.random.PRNGKey(self._sample_seed)
+                            if sample_key is None else sample_key)
         self.prefill(prompts, embeddings=embeddings)
         self.decode(gen - 1)
         return np.asarray(jnp.concatenate(self.generated, axis=1))
@@ -231,28 +329,303 @@ class ServeLoop:
         *inclusive* of the "route" / "execute" layer calls made inside it
         (those entries break the pass down; do not sum them with "decode"
         or "prefill")."""
-        out: Dict[str, Any] = {}
-        for phase in ("prefill", "route", "execute", "decode"):
-            ss = [s for s in self.stats if s.phase == phase]
-            if ss:
-                out[phase] = {"seconds": sum(s.seconds for s in ss),
-                              "calls": len(ss)}
+        out = self._phase_summary()
         dec = out.get("decode")
         if dec and dec["seconds"] > 0:
             batch = self.generated[0].shape[0] if self.generated else 0
             out["decode"]["tok_per_s"] = batch * dec["calls"] / dec["seconds"]
+        return out
+
+
+# ---------------------------------------------------- continuous batching --
+
+@dataclasses.dataclass
+class Request:
+    """One user request in the continuous-batching scheduler.
+
+    The scheduler fills in the lifecycle fields: ``tokens`` (generated ids),
+    ``latencies_s`` (wall seconds of the step that emitted each token --
+    the prefill pass for token 0, the shared decode step after), ``slot``
+    (the cache batch row while resident), ``pos`` (next cache write
+    position), and the timing marks used for first-token latency."""
+    prompt: np.ndarray
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    uid: int = -1
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    pos: int = 0
+    done: bool = False
+    submit_time: float = 0.0
+    first_token_s: Optional[float] = None
+    key: Optional[jax.Array] = None    # per-request sampling key chain
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.prompt).size)
+
+
+class ServeScheduler(_ServeBase):
+    """Continuous-batching multi-tenant serving frontend.
+
+    A queue of :class:`Request`\\ s is served by a fixed pool of cache
+    *slots* (batch rows of one shared decode cache).  Between decode steps
+    the scheduler **evicts** finished sequences (token budget reached or
+    EOS) and **admits** queued prompts into the freed rows: each admission
+    runs a single-request prefill (fused or layered two-phase, same as
+    :class:`ServeLoop`) and scatters the resulting cache into the slot row
+    -- attention KV, MoE routing occupancy, and recurrent state are all
+    batch-row-indexed (see ``model.init_cache``), so neighbours are
+    untouched.  Decode then advances *every* resident sequence one token in
+    a single batched step at per-row positions.
+
+    **Batch-bucket law.**  The decode step runs on cache rows
+    ``[0, batch_bucket(highest occupied slot + 1))`` --
+    ``engine.batch_bucket`` is the PR-3 power-of-two stream-bucket law
+    applied to the batch dim -- so the compiled decode-step shapes (and the
+    phase-2 execute signatures in two-phase mode) are bounded by
+    (batch buckets x nnzb buckets), never one per occupancy pattern.
+    Vacant rows inside the bucket still compute (their results are masked
+    at sampling and their cache rows are fully overwritten at the next
+    admission); per-row independence keeps them from perturbing residents.
+
+    **Per-request determinism.**  Sampling state is per request (a key
+    chain folded from ``sample_seed`` and the request uid), so a request's
+    tokens do not depend on batch composition; at temperature 0 the
+    generated tokens are token-identical to a sequential single-request
+    :class:`ServeLoop` with the same ``max_seq``.
+    """
+
+    def __init__(self, params, cfg, *, max_seq: int, max_slots: int = 8,
+                 dispatch: Optional[str] = None,
+                 two_phase: Optional[bool] = None,
+                 temperature: float = 0.0, sample_seed: int = 3,
+                 batch_min_bucket: int = 1, cache_dtype=jnp.bfloat16):
+        super().__init__(params, cfg, dispatch=dispatch, two_phase=two_phase,
+                         temperature=temperature, sample_seed=sample_seed)
+        self.max_seq = max_seq
+        self.batch_min_bucket = batch_min_bucket
+        # allocate the slot pool at its own bucket so every step bucket,
+        # clamped by the pool, is still a power of two
+        self.n_slots = engine.batch_bucket(max_slots,
+                                           minimum=batch_min_bucket)
+        self.cache_dtype = cache_dtype
+        self.cache = M.init_cache(cfg, self.n_slots, max_seq,
+                                  dtype=cache_dtype)
+        self.slots: List[Optional[Request]] = [None] * self.n_slots
+        self.queue: Deque[Request] = collections.deque()
+        self.finished: List[Request] = []
+        self.step_idx = 0
+        self._stat_step = -1
+        self._next_uid = 0
+        self.batch_buckets: set = set()
+        self._decode_fused = jax.jit(
+            lambda p, c, pos, tok: M.decode_step(p, cfg, c, pos, tok))
+
+    # -------------------------------------------------------------- admit --
+
+    def _step_label(self) -> int:
+        return self._stat_step
+
+    def submit(self, prompt, max_new_tokens: int,
+               eos_id: Optional[int] = None) -> Request:
+        """Queue a request.  Admission control happens here: a request whose
+        prompt + generation budget cannot fit the cache is refused up front
+        (its final token is sampled but never written, hence the ``- 1``)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if max_new_tokens < 1:
+            raise ValueError("submit: max_new_tokens must be >= 1")
+        need = prompt.size + max_new_tokens - 1
+        if need > self.max_seq:
+            raise ValueError(
+                f"submit: request needs {need} cache positions "
+                f"({prompt.size} prompt + {max_new_tokens} generated - 1) "
+                f"but max_seq is {self.max_seq}; it could never be served "
+                "without a KV-cache overflow.")
+        req = Request(prompt=prompt, max_new_tokens=max_new_tokens,
+                      eos_id=eos_id, uid=self._next_uid,
+                      submit_time=time.monotonic(),
+                      key=jax.random.fold_in(
+                          jax.random.PRNGKey(self._sample_seed),
+                          self._next_uid))
+        self._next_uid += 1
+        self.queue.append(req)
+        return req
+
+    def _sample_one(self, logits_row: jax.Array, req: Request) -> int:
+        lg = logits_row[: self.cfg.vocab_size]
+        if self.temperature > 0:
+            req.key, k = jax.random.split(req.key)
+            return int(jax.random.categorical(k, lg / self.temperature))
+        return int(jnp.argmax(lg))
+
+    def _finish_or_keep(self, req: Request, tok: int):
+        if len(req.tokens) >= req.max_new_tokens or (
+                req.eos_id is not None and tok == req.eos_id):
+            self._evict(req)
+
+    def _evict(self, req: Request):
+        self.slots[req.slot] = None
+        req.slot = None
+        req.done = True
+        self.finished.append(req)
+
+    def _prefill_into(self, req: Request, slot: int):
+        """Single-request prefill, scattered into cache batch row ``slot``."""
+        self._stat_step = -1
+        prompts = jnp.asarray(req.prompt[None, :])
+        t0 = time.monotonic()
         if self.two_phase:
-            routes = [s for s in self.stats if s.phase == "route"
-                      and "nnzb_stream" in s.extra]
-            if routes:
-                out["stream"] = {
-                    "nnzb_stream_mean": float(np.mean(
-                        [s.extra["nnzb_stream"] for s in routes])),
-                    "nnzb_routed_mean": float(np.mean(
-                        [s.extra["nnzb_routed"] for s in routes])),
-                    "grid_nnzb": routes[-1].extra["grid_nnzb"],
-                }
-            out["compile_signatures"] = len(self._exec_keys)
+            logits, cache1, pos = M.prefill_layered(
+                self.params, prompts, self.cfg, max_seq=self.max_seq,
+                cache_dtype=self.cache_dtype, moe_fn=self._moe_two_phase)
+        else:
+            with self._dispatch_ctx():
+                logits, cache1, pos = M.prefill(
+                    self.params, prompts, self.cfg, max_seq=self.max_seq,
+                    cache_dtype=self.cache_dtype)
+        logits, cache1 = jax.block_until_ready((logits, cache1))
+        dt = time.monotonic() - t0
+        self.stats.append(StepStat("prefill", self.step_idx, dt,
+                                   tokens=req.prompt_len,
+                                   extra={"uid": req.uid, "slot": slot}))
+        # one scatter per cache leaf: row `slot` becomes this request, every
+        # other row's state is untouched
+        self.cache = jax.tree.map(
+            lambda big, small: big.at[:, slot].set(
+                small[:, 0].astype(big.dtype)),
+            self.cache, cache1)
+        req.slot, req.pos = slot, int(pos)
+        self.slots[slot] = req
+        tok = self._sample_one(logits[0, -1], req)
+        req.tokens.append(tok)
+        req.latencies_s.append(dt)
+        req.first_token_s = time.monotonic() - req.submit_time
+        self._finish_or_keep(req, tok)
+
+    def admit(self) -> List[Request]:
+        """Prefill queued requests into free slots (lowest index first --
+        keeps the occupied prefix, and so the step's batch bucket, small)."""
+        joined = []
+        while self.queue and None in self.slots:
+            req = self.queue.popleft()
+            self._prefill_into(req, self.slots.index(None))
+            joined.append(req)
+        return joined
+
+    # ------------------------------------------------------------- decode --
+
+    @property
+    def active(self) -> List[Request]:
+        return [r for r in self.slots if r is not None]
+
+    def decode_step(self) -> List[Tuple[Request, int]]:
+        """One batched decode step over the occupied slot prefix; returns
+        the (request, token) pairs emitted."""
+        active = self.active
+        if not active:
+            return []
+        for r in active:
+            if r.pos >= self.max_seq:
+                # admission control makes this unreachable for well-formed
+                # requests; keep the guard -- the fused jit path cannot
+                # host-check and would silently clamp the cache write
+                raise RuntimeError(
+                    f"ServeScheduler.decode_step: KV-cache overflow -- "
+                    f"request {r.uid} at write position {r.pos} >= max_seq "
+                    f"{self.max_seq}.")
+        hi = max(i for i, r in enumerate(self.slots) if r is not None) + 1
+        bucket = engine.batch_bucket(hi, minimum=self.batch_min_bucket,
+                                     cap=self.n_slots)
+        self.batch_buckets.add(bucket)
+        pos_vec = np.zeros(bucket, np.int32)
+        tok_vec = np.zeros((bucket, 1), np.int32)
+        for i, r in enumerate(self.slots[:bucket]):
+            if r is not None:
+                pos_vec[i] = r.pos
+                tok_vec[i, 0] = r.tokens[-1]
+        step_cache = jax.tree.map(lambda a: a[:, :bucket], self.cache)
+        self._stat_step = self.step_idx
+        t0 = time.monotonic()
+        if self.two_phase:
+            logits, new_cache = M.decode_step_layered(
+                self.params, self.cfg, step_cache, pos_vec,
+                jnp.asarray(tok_vec), moe_fn=self._moe_two_phase)
+        else:
+            with self._dispatch_ctx():
+                logits, new_cache = self._decode_fused(
+                    self.params, step_cache, jnp.asarray(pos_vec),
+                    jnp.asarray(tok_vec))
+        logits = jax.block_until_ready(logits)
+        dt = time.monotonic() - t0
+        self.stats.append(StepStat(
+            "decode", self.step_idx, dt, tokens=len(active),
+            extra={"batch_bucket": bucket, "active": len(active)}))
+        self.cache = jax.tree.map(
+            lambda big, small: big.at[:, :bucket].set(
+                small.astype(big.dtype)),
+            self.cache, new_cache)
+        emitted = []
+        for i, r in enumerate(self.slots[:bucket]):
+            if r is None:
+                continue   # vacant bucket row: computed, masked out here
+            tok = self._sample_one(logits[i, -1], r)
+            r.tokens.append(tok)
+            r.latencies_s.append(dt)
+            r.pos += 1
+            emitted.append((r, tok))
+            self._finish_or_keep(r, tok)
+        return emitted
+
+    # -------------------------------------------------------------- drive --
+
+    def step(self) -> List[Tuple[Request, int]]:
+        """One scheduler tick: evictions happened at the end of the previous
+        tick, so admit into the freed slots, then decode one token for every
+        resident sequence."""
+        self.admit()
+        out = self.decode_step()
+        self.step_idx += 1
+        return out
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slots)
+
+    def run(self, max_steps: int = 1_000_000) -> Dict[int, np.ndarray]:
+        """Drive until queue and slots drain (or ``max_steps`` ticks);
+        returns {uid: generated token ids} over all finished requests."""
+        steps = 0
+        while self.has_work() and steps < max_steps:
+            self.step()
+            steps += 1
+        return {r.uid: np.asarray(r.tokens, np.int32)
+                for r in self.finished}
+
+    def summary(self) -> Dict[str, Any]:
+        """Aggregate serving stats: per-phase seconds (decode inclusive of
+        route/execute in two-phase mode, as in :class:`ServeLoop`), decode
+        tok/s over *emitted* tokens, per-token and first-token latency
+        percentiles, and the bucket accounting that bounds recompiles."""
+        out = self._phase_summary()
+        dec = out.get("decode")
+        if dec and dec["seconds"] > 0:
+            emitted = sum(s.tokens for s in self.stats if s.phase == "decode")
+            out["decode"]["tokens"] = emitted
+            out["decode"]["tok_per_s"] = emitted / dec["seconds"]
+        reqs = self.finished + self.active
+        lat = [s for r in reqs for s in r.latencies_s]
+        out["token_latency_ms"] = _percentiles_ms(lat)
+        out["first_token_ms"] = _percentiles_ms(
+            [r.first_token_s for r in reqs if r.first_token_s is not None])
+        out["requests"] = {"finished": len(self.finished),
+                           "queued": len(self.queue),
+                           "active": len(self.active)}
+        out["batch_buckets"] = sorted(self.batch_buckets)
+        if self.two_phase:
+            out["nnzb_buckets"] = sorted(
+                {sig[3][0] for sig in self._exec_keys
+                 if sig[3] is not None})
         return out
 
 
@@ -270,6 +643,14 @@ def main():
     ap.add_argument("--two-phase", choices=["auto", "on", "off"],
                     default="auto",
                     help="route-then-compile decode (auto = when moe+bcsr)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="drive the continuous-batching scheduler on a "
+                         "synthetic multi-user trace instead of one static "
+                         "batch")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="--continuous: number of synthetic requests")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="--continuous: resident slot pool size")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -277,6 +658,38 @@ def main():
     params = M.init_params(key, cfg)
     max_seq = args.prompt_len + args.gen + (
         cfg.frontend_tokens if cfg.frontend != "none" else 0)
+
+    dispatch = None if args.dispatch == "config" else args.dispatch
+    two_phase = None if args.two_phase == "auto" else args.two_phase == "on"
+
+    if args.continuous:
+        rng = np.random.default_rng(0)
+        sched = ServeScheduler(
+            params, cfg, max_seq=max_seq, max_slots=args.slots,
+            dispatch=dispatch, two_phase=two_phase,
+            temperature=args.temperature)
+        for _ in range(args.requests):
+            plen = int(rng.integers(max(2, args.prompt_len // 2),
+                                    args.prompt_len + 1))
+            sched.submit(rng.integers(0, cfg.vocab_size, plen),
+                         int(rng.integers(max(2, args.gen // 2),
+                                          args.gen + 1)))
+        gen = sched.run()
+        s = sched.summary()
+        dec = s.get("decode", {"seconds": 0.0, "calls": 0})
+        print(f"served {len(gen)} requests in {sched.step_idx} steps "
+              f"({dec.get('tok_per_s', 0.0):.1f} decode tok/s)"
+              + (" [two-phase]" if sched.two_phase else ""))
+        lat = s["token_latency_ms"]
+        print(f"per-token latency: p50 {lat['p50']:.1f} ms, "
+              f"p99 {lat['p99']:.1f} ms over {lat['n']} tokens")
+        print(f"batch buckets: {s['batch_buckets']}"
+              + (f"; nnzb buckets: {s['nnzb_buckets']}; "
+                 f"{s['compile_signatures']} phase-2 signature(s)"
+                 if sched.two_phase else ""))
+        for uid in sorted(gen)[:2]:
+            print(f"  [{uid}] {gen[uid][:16].tolist()}")
+        return
 
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,
@@ -288,9 +701,7 @@ def main():
             (args.batch, cfg.frontend_tokens, cfg.d_model))
 
     loop = ServeLoop(
-        params, cfg, max_seq=max_seq,
-        dispatch=None if args.dispatch == "config" else args.dispatch,
-        two_phase=None if args.two_phase == "auto" else args.two_phase == "on",
+        params, cfg, max_seq=max_seq, dispatch=dispatch, two_phase=two_phase,
         temperature=args.temperature)
     gen = loop.run(prompts, args.gen, embeddings=emb)
     s = loop.summary()

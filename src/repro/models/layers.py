@@ -228,7 +228,11 @@ def apply_attention(p, x, cfg: ArchConfig, *, window=None, positions=None,
     """Self-attention (train/prefill) or one-step decode when ``cache`` given.
 
     cache: dict(k=(B,Hkv,S,hd), v=...) -- updated functionally; ``cache_len``
-    is the current fill (int32 scalar or (B,)).
+    is the current fill: an int32 scalar (whole-batch decode, every row at
+    the same position) or an int32 ``(B,)`` vector (continuous batching,
+    every row at its own position -- the write becomes a per-row scatter and
+    RoPE/masking use per-row positions; per row the arithmetic is identical
+    to the scalar path at that row's position).
     ``collect_kv``: when > 0 (prefill), also return a fresh KV cache of that
     capacity filled with this call's keys/values (window-truncated for local
     layers).
@@ -264,10 +268,20 @@ def apply_attention(p, x, cfg: ArchConfig, *, window=None, positions=None,
             new_cache = {"k": kc, "v": vc}
     else:
         assert S == 1
-        pos = jnp.asarray(cache_len).reshape(())  # scalar fill pointer
-        q, k1, v1 = _qkv(p, x, cfg, jnp.full((1,), pos))
-        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype), pos, axis=2)
-        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype), pos, axis=2)
+        pos = jnp.asarray(cache_len)
+        if pos.ndim:  # per-row fill pointers (continuous batching)
+            pos = pos.reshape(-1).astype(jnp.int32)
+            q, k1, v1 = _qkv(p, x, cfg, pos[:, None, None])
+            b_idx = jnp.arange(B)
+            kc = cache["k"].at[b_idx, :, pos].set(
+                k1[:, :, 0].astype(cache["k"].dtype))
+            vc = cache["v"].at[b_idx, :, pos].set(
+                v1[:, :, 0].astype(cache["v"].dtype))
+        else:
+            pos = pos.reshape(())  # scalar fill pointer
+            q, k1, v1 = _qkv(p, x, cfg, jnp.full((1,), pos))
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype), pos, axis=2)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype), pos, axis=2)
         from repro.kernels.flash_attention.ops import decode_attention
         out = decode_attention(q, kc, vc, kv_len=pos + 1, window=window)
         new_cache = {"k": kc, "v": vc}

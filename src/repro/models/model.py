@@ -318,7 +318,15 @@ def prefill(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
 
 def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
                dtype=jnp.bfloat16) -> Params:
-    """Stacked decode caches, one entry per slot (+ shared-attn slot)."""
+    """Stacked decode caches, one entry per slot (+ shared-attn slot).
+
+    Every leaf carries the batch at dim 1 ((n_repeats, B, ...)), and all
+    per-request decode state -- attention KV, MoE routing occupancy
+    ``counts[b, e]``, SSM/RWKV recurrent state -- is indexed by batch row.
+    Batch rows are therefore independent *request slots*: a continuous-
+    batching scheduler (``launch.serve.ServeScheduler``) evicts a finished
+    sequence and admits a new one by scattering a fresh single-request
+    prefill cache into that row, with zero effect on its neighbours."""
     d = cfg.d_model
     hd, Hkv = cfg.hd, cfg.n_kv_heads
 
@@ -374,21 +382,36 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
 
 
 def _decode_block_attn(kind, p, x, cfg, cache, pos, dtype, moe_fn=None):
-    """Attention decode with ring-buffer handling for local layers."""
+    """Attention decode with ring-buffer handling for local layers.
+
+    ``pos`` is an int32 scalar (whole-batch decode) or a ``(B,)`` vector of
+    per-row positions (continuous batching); both paths write the same
+    cache slots and mask the same tail per row."""
     window = _window_for(kind, cfg)
     kc = cache["attn"]["k"]
     Lc = kc.shape[2]
     if window and Lc == window:
         # ring buffer: write slot = pos % window; all filled slots visible
-        slot = pos % window
+        pos_a = jnp.asarray(pos)
+        slot = pos_a % window
         h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
-        q, k1, v1 = L._qkv(p["attn"], h, cfg, jnp.full((1,), pos))
-        knew = jax.lax.dynamic_update_slice_in_dim(
-            kc, k1.astype(kc.dtype), slot, axis=2)
-        vnew = jax.lax.dynamic_update_slice_in_dim(
-            cache["attn"]["v"], v1.astype(kc.dtype), slot, axis=2)
+        if pos_a.ndim:  # per-row ring slots (continuous batching)
+            slot = slot.reshape(-1).astype(jnp.int32)
+            q, k1, v1 = L._qkv(p["attn"], h, cfg,
+                               pos_a.reshape(-1)[:, None, None])
+            b_idx = jnp.arange(x.shape[0])
+            knew = kc.at[b_idx, :, slot].set(k1[:, :, 0].astype(kc.dtype))
+            vnew = cache["attn"]["v"].at[b_idx, :, slot].set(
+                v1[:, :, 0].astype(kc.dtype))
+        else:
+            q, k1, v1 = L._qkv(p["attn"], h, cfg, jnp.full((1,), pos_a))
+            knew = jax.lax.dynamic_update_slice_in_dim(
+                kc, k1.astype(kc.dtype), slot, axis=2)
+            vnew = jax.lax.dynamic_update_slice_in_dim(
+                cache["attn"]["v"], v1.astype(kc.dtype), slot, axis=2)
         from repro.kernels.flash_attention.ops import decode_attention
-        a = decode_attention(q, knew, vnew, kv_len=jnp.minimum(pos + 1, window))
+        a = decode_attention(q, knew, vnew,
+                             kv_len=jnp.minimum(pos_a + 1, window))
         a = a.transpose(0, 2, 1, 3).reshape(x.shape[0], 1, cfg.n_heads * cfg.hd)
         x = x + a @ p["attn"]["wo"].astype(a.dtype)
         h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
@@ -398,9 +421,59 @@ def _decode_block_attn(kind, p, x, cfg, cache, pos, dtype, moe_fn=None):
     return apply_block(kind, p, x, cfg, cache=cache, pos=pos, moe_fn=moe_fn)
 
 
+def cache_capacity(cache) -> Optional[int]:
+    """Static sequence capacity of a decode cache: the minimum cache length
+    over its full (non-ring) attention slots, or None for cache-free /
+    attention-free stacks.  Ring buffers (``attn_local``) are excluded --
+    they wrap by construction and never overflow.  This is what callers must
+    host-check ``pos`` against before a decode write: the cache update is a
+    ``dynamic_update_slice`` / scatter, and XLA *clamps / drops*
+    out-of-bounds writes instead of failing, which silently corrupts the
+    last cache slot (see ``ServeLoop.decode_step``)."""
+    caps = []
+
+    def visit(node):
+        if isinstance(node, dict):
+            if "attn" in node and isinstance(node["attn"], dict) \
+                    and "k" in node["attn"]:
+                caps.append(node["attn"]["k"].shape[3])
+            else:
+                for v in node.values():
+                    visit(v)
+        elif isinstance(node, (tuple, list)):
+            for v in node:
+                visit(v)
+
+    visit(cache)
+    return min(caps) if caps else None
+
+
+def check_cache_fits(cache, pos, *, who: str = "decode_step"):
+    """Raise (host-side) when a concrete ``pos`` would write past the decode
+    cache capacity.  ``pos`` may be a scalar or a per-row vector; traced
+    positions are the caller's responsibility (the fused jit path cannot
+    host-check -- ``ServeLoop`` checks before dispatching)."""
+    if isinstance(pos, jax.core.Tracer):
+        return
+    cap = cache_capacity(cache)
+    if cap is None:
+        return
+    import numpy as _np
+    top = int(_np.max(_np.asarray(pos)))
+    if top >= cap:
+        raise ValueError(
+            f"{who}: KV-cache overflow -- write position {top} >= cache "
+            f"capacity {cap} (max_seq). The cache update would be silently "
+            "clamped by XLA, corrupting the last cache slot and generating "
+            "garbage tokens; grow max_seq or stop the sequence.")
+
+
 def decode_step(params: Params, cfg: ArchConfig, cache, pos, tokens_1,
                 dtype=jnp.bfloat16) -> Tuple[jax.Array, Any]:
-    """One-token decode. tokens_1: (B, 1) int32; pos: () int32 current fill.
+    """One-token decode. tokens_1: (B, 1) int32; pos: () int32 current fill,
+    or a (B,) int32 vector of per-row fills (continuous batching -- every
+    batch row decodes at its own position, bit-identical per row to the
+    scalar path at that position).
     Returns (logits (B, 1, V) f32, new_cache)."""
     pol = precision_policy(cfg.policy)
     cd = pol.compute_dtype
@@ -551,12 +624,18 @@ def decode_step_layered(params: Params, cfg: ArchConfig, cache, pos,
     on (cfg, kind) here and on the x/cache shapes by jit itself), so the
     host-dispatch tax is one call per layer, not one per op.  ``moe_fn`` is
     threaded to every attn+moe block (signature of ``moe.apply_moe``);
-    ``pos`` should be concrete here (a Python int) so host routing sees real
-    positions -- it rides into the jitted steps as a traced scalar, so new
-    positions do NOT retrace.  ``dtype`` is accepted for signature parity
-    with :func:`decode_step` and (like there) unused: cache dtypes follow
-    the cache arrays themselves.
+    ``pos`` should be concrete here (a Python int, or an int ``(B,)``
+    numpy vector for continuous batching -- per-row positions ride through
+    attention writes, RoPE, and the prefix-stable MoE occupancy exactly like
+    the scalar path does per row) so host routing sees real positions -- it
+    rides into the jitted steps as a traced scalar/vector, so new positions
+    do NOT retrace.  Being concrete, ``pos`` is also host-checked against
+    the cache capacity here (:func:`check_cache_fits`) -- the layered guard
+    against the silent out-of-bounds write clamp.  ``dtype`` is accepted for
+    signature parity with :func:`decode_step` and (like there) unused: cache
+    dtypes follow the cache arrays themselves.
     """
+    check_cache_fits(cache, pos, who="decode_step_layered")
     pol = precision_policy(cfg.policy)
     cd = pol.compute_dtype
     x = jnp.take(params["embed"], tokens_1, axis=0).astype(cd)

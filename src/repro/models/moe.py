@@ -133,7 +133,9 @@ def dispatch_capacity(S: int, cfg: ArchConfig, pos0=0) -> int:
     ``within <= slot < C(pos0 + S - 1)``, so the min of the two bounds is a
     safe buffer size; when ``pos0`` is traced (stepwise decode) only the
     S bound is static.  Uses the same f32 arithmetic as
-    :func:`prefix_capacity` so the bound can never be under the keep test."""
+    :func:`prefix_capacity` so the bound can never be under the keep test.
+    Traced *and* per-row-vector ``pos0`` (continuous batching) both take
+    the S bound -- the capacity must be one static int for the batch."""
     if not isinstance(pos0, (int, np.integer)):
         return max(1, S)
     cap = int(np.ceil(np.float32(pos0 + S)
@@ -147,8 +149,11 @@ def route_tokens(router: jax.Array, x: jax.Array, cfg: ArchConfig, *,
 
     x: (B, S, d); ``counts``: (B, E) int32 occupancy carried from previous
     calls on the same rows (None = fresh sequence); ``pos0``: absolute
-    position of x[:, 0] (int or traced scalar).  The decision for token
-    (b, s) depends only on row b's tokens at positions <= pos0 + s.
+    position of x[:, 0] -- an int / traced scalar shared by the whole
+    batch, or a ``(B,)`` vector of per-row positions (continuous batching:
+    each request slot sits at its own depth in its own sequence).  The
+    decision for token (b, s) depends only on row b's tokens at positions
+    <= pos0[b] + s, so it is identical to routing that row alone.
     """
     B, S, _ = x.shape
     E = cfg.n_experts
@@ -164,8 +169,10 @@ def route_tokens(router: jax.Array, x: jax.Array, cfg: ArchConfig, *,
     within = ((jnp.cumsum(onehot, axis=1) - onehot) * onehot).sum(-1)
     base = (counts[:, None, :] * onehot).sum(-1)                  # (B, S)
     slot = base + within
-    t_abs = jnp.asarray(pos0, jnp.int32) + jnp.arange(S, dtype=jnp.int32)
-    keep = slot < prefix_capacity(t_abs, E, cfg.capacity_factor)[None, :]
+    t_abs = (jnp.asarray(pos0, jnp.int32)[..., None]
+             + jnp.arange(S, dtype=jnp.int32))       # (S,) or (B, S)
+    cap = prefix_capacity(t_abs, E, cfg.capacity_factor)
+    keep = slot < (cap if cap.ndim == 2 else cap[None, :])
     new_counts = counts + onehot.sum(axis=1)
     return Routing(gate, expert_id, slot, within, keep, new_counts, logits)
 
@@ -541,7 +548,15 @@ def route_moe(p, x, cfg: ArchConfig, *, counts: Optional[jax.Array] = None,
     E = cfg.n_experts
     _check_groups(B, cfg, groups or pctx.MOE_GROUPS, "route_moe")
 
-    pos0 = 0 if pos is None else int(pos)  # concrete by contract
+    # concrete by contract: an int, or an int (B,) vector under continuous
+    # batching (per-row positions; the dispatch capacity then takes the
+    # position-independent S bound)
+    if pos is None:
+        pos0 = 0
+    elif np.ndim(pos) == 0:
+        pos0 = int(pos)
+    else:
+        pos0 = np.asarray(pos, np.int32)
     C = dispatch_capacity(S, cfg, pos0=pos0)
     # router + slot assignment run as ONE jitted program (pos0 traced, so a
     # whole decode phase reuses a single compile); the stream compaction

@@ -54,3 +54,40 @@ def test_emit_bench_schema(tmp_path, sweep_results):
     assert doc["bench"] == "smoke_test"
     assert {"backend", "device_count", "jax_version"} <= set(doc)
     assert doc["spmm"]["points"]
+
+
+@pytest.fixture(scope="module")
+def serve_results():
+    sys.path.insert(0, REPO_ROOT)
+    try:
+        from benchmarks import bench_serve
+    finally:
+        sys.path.pop(0)
+    return bench_serve.run(smoke=True)
+
+
+def test_bench_serve_smoke(serve_results):
+    """The continuous-batching bench drains its trace on both backends and
+    reports sane throughput/latency numbers."""
+    for backend in ("gather", "bcsr"):
+        e = serve_results[backend]
+        t = e["trace"]
+        assert e["requests_finished"] == t["requests"]
+        assert t["generated_tokens"] > 0
+        assert e["decode_tok_per_s"] > 0
+        lat = e["token_latency_ms"]
+        assert lat["n"] == t["generated_tokens"]
+        assert 0 < lat["p50"] <= lat["p99"]
+        ftl = e["first_token_ms"]
+        assert ftl["n"] == t["requests"] and ftl["p50"] > 0
+
+
+def test_bench_serve_signature_bound(serve_results):
+    """The batch-bucket law holds under the synthetic trace: phase-2
+    recompiles stay within the (batch-bucket x nnzb-bucket x token-shape)
+    budget, and every observed batch bucket is a power of two."""
+    e = serve_results["bcsr"]
+    assert e["two_phase"]
+    assert e["compile_signatures"] <= e["signature_bound"]
+    for b in e["batch_buckets"]:
+        assert b & (b - 1) == 0 and b > 0
