@@ -210,6 +210,38 @@ def run(bench_json: dict | None = None) -> list:
         lambda: moe_mod.execute_moe_jit(params_b, xb_in, plan, cfg_b)[0])
     got2p = moe_mod.execute_moe_jit(params_b, xb_in, plan, cfg_b)[0]
     assert float(jnp.abs(ref - got2p).max()) == 0.0, "two-phase diverges"
+    # Pipelined route/execute chain (PR 7): N back-to-back two-phase layer
+    # calls, blocking on every execute (the serial serving loop) vs leaving
+    # one execute in flight behind the next host route (StreamPipeline
+    # depth 1, the pipelined loop).  The delta is the host routing yield
+    # the pipeline hides.
+    from repro.kernels import engine as eng
+    N_CHAIN = 8
+
+    def chain_serial():
+        out = xb_in
+        for _ in range(N_CHAIN):
+            plan_i, _ = moe_mod.route_moe(params_b, out, cfg_b,
+                                          dispatch="bcsr")
+            out, _ = moe_mod.execute_moe_jit(params_b, out, plan_i, cfg_b)
+            jax.block_until_ready(out)
+        return out
+
+    def chain_pipelined():
+        pipe = eng.StreamPipeline(1)
+        out = xb_in
+        for _ in range(N_CHAIN):
+            plan_i, _ = moe_mod.route_moe(params_b, out, cfg_b,
+                                          dispatch="bcsr")
+            out, _ = moe_mod.execute_moe_jit(params_b, out, plan_i, cfg_b)
+            pipe.push("exec", out)
+        pipe.drain()
+        return out
+
+    t_chain_ser = time_fn(chain_serial)
+    t_chain_pip = time_fn(chain_pipelined)
+    assert float(jnp.abs(chain_serial() - chain_pipelined()).max()) == 0.0, \
+        "pipelined chain diverges"
     if bench_json is not None:
         bench_json["two_phase"] = {
             "tokens": TB, "experts": E, "d_model": DB,
@@ -219,6 +251,10 @@ def run(bench_json: dict | None = None) -> list:
             "nnzb_routed": info["nnzb_routed"],
             "grid_nnzb": info["grid_nnzb"],
             "stream_reduction": info["grid_nnzb"] / info["nnzb_stream"],
+            "chain_layers": N_CHAIN,
+            "serial_chain_us": t_chain_ser * 1e6,
+            "pipelined_chain_us": t_chain_pip * 1e6,
+            "overlap_speedup": t_chain_ser / t_chain_pip,
         }
 
     # BCSR-on-kernel: dispatch matrix (T x T permutation-ish) as block-sparse
@@ -264,6 +300,10 @@ def run(bench_json: dict | None = None) -> list:
                     f"{info['grid_nnzb'] / info['nnzb_stream']:.1f}x;"
                     f"jit_gather_vs_two_phase="
                     f"{(t_route + t_exec) / t_gth:.2f}x"))
+    rows.append(row("moe/two_phase_chain_pipelined", t_chain_pip * 1e6,
+                    f"layers={N_CHAIN};"
+                    f"serial_us={t_chain_ser * 1e6:.1f};"
+                    f"overlap_speedup={t_chain_ser / t_chain_pip:.2f}x"))
     rows.append(row("moe/bcsr_kernel_dispatch(interp)", t_k * 1e6,
                     f"useful_flops={useful};block_density={a.density():.4f}"))
     rows.append(row("moe/bcsr_batched_dispatch(interp)", t_bat * 1e6,

@@ -20,6 +20,12 @@ freed slots.  What this measures (and records in ``BENCH_serve.json``):
   nnzb buckets observed, and the phase-2 compile-signature count, which
   the batch-bucket x nnzb-bucket law bounds (asserted by the bench-tier
   smoke test, ``tests/test_bench_smoke.py``).
+* **serial-vs-pipelined A/B** -- each backend runs the same trace at
+  ``pipeline_depth=0`` (serial, every phase blocks) and ``=1`` (route
+  dispatched one program ahead, executes left in flight, sampling on
+  device); the ``ab`` row records decode tok/s for both, p50/p99 token
+  latency for both, the fraction of host-route time hidden behind an
+  in-flight execute, and that the two runs emitted identical tokens.
 
 Run modes:
   python benchmarks/bench_serve.py                 # smoke-scout trace
@@ -108,31 +114,62 @@ def run(*, smoke: bool = False, dispatch: Optional[str] = None) -> dict:
     out = {"config": {"arch": cfg.name, "max_seq": max_seq, "slots": slots,
                       **{k: v for k, v in trace_kw.items() if k != "vocab"}}}
     for backend in ("gather", "bcsr"):
-        sched = ServeScheduler(params, cfg, max_seq=max_seq,
-                               max_slots=slots, dispatch=backend)
-        s = drive(sched, synth_trace(**trace_kw))
-        bound = len(s["batch_buckets"]) if sched.two_phase else None
-        entry = {
-            "two_phase": sched.two_phase,
-            "decode_tok_per_s": s.get("decode", {}).get("tok_per_s", 0.0),
-            "token_latency_ms": s["token_latency_ms"],
-            "first_token_ms": s["first_token_ms"],
-            "batch_buckets": s["batch_buckets"],
-            "trace": s["trace"],
-            "requests_finished": s["requests"]["finished"],
+        # serial-vs-pipelined A/B: the same trace through pipeline_depth 0
+        # (every phase blocks, the pre-PR-7 loop) and 1 (route-ahead fused
+        # programs, in-flight executes, on-device sampling) -- the contract
+        # is identical tokens, lower decode wall
+        per_depth, tokens = {}, {}
+        for depth, label in ((0, "serial"), (1, "pipelined")):
+            sched = ServeScheduler(params, cfg, max_seq=max_seq,
+                                   max_slots=slots, dispatch=backend,
+                                   pipeline_depth=depth)
+            s = drive(sched, synth_trace(**trace_kw))
+            entry = {
+                "two_phase": sched.two_phase,
+                "pipeline_depth": depth,
+                "decode_tok_per_s": s.get("decode", {}).get("tok_per_s",
+                                                            0.0),
+                "token_latency_ms": s["token_latency_ms"],
+                "first_token_ms": s["first_token_ms"],
+                "batch_buckets": s["batch_buckets"],
+                "trace": s["trace"],
+                "requests_finished": s["requests"]["finished"],
+                "timing": s.get("timing", {}),
+            }
+            if sched.two_phase:
+                # the bucket law: phase-2 signatures are bounded by the
+                # product of observed batch buckets, nnzb buckets, and token
+                # shapes (decode S=1 + one per distinct prompt length)
+                prompt_shapes = len({len(p) for _, p, _ in
+                                     synth_trace(**trace_kw)}) + 1
+                entry.update(
+                    nnzb_buckets=s["nnzb_buckets"],
+                    compile_signatures=s["compile_signatures"],
+                    signature_bound=(len(s["batch_buckets"]) + 1)
+                    * max(1, len(s["nnzb_buckets"])) * prompt_shapes)
+            per_depth[label] = entry
+            tokens[label] = {r.uid: list(map(int, r.tokens))
+                             for r in sched.finished}
+        ser, pip = per_depth["serial"], per_depth["pipelined"]
+        # the serial entry stays the backend's top-level schema (the
+        # pre-PR-7 layout); the pipelined run and the A/B row ride under it
+        e = dict(ser)
+        e["pipelined"] = pip
+        e["ab"] = {
+            "serial_tok_per_s": ser["decode_tok_per_s"],
+            "pipelined_tok_per_s": pip["decode_tok_per_s"],
+            "decode_speedup": (pip["decode_tok_per_s"]
+                               / ser["decode_tok_per_s"]
+                               if ser["decode_tok_per_s"] else 0.0),
+            "serial_p50_ms": ser["token_latency_ms"]["p50"],
+            "pipelined_p50_ms": pip["token_latency_ms"]["p50"],
+            "serial_p99_ms": ser["token_latency_ms"]["p99"],
+            "pipelined_p99_ms": pip["token_latency_ms"]["p99"],
+            "route_hidden_frac": pip["timing"].get("route_hidden_frac",
+                                                   0.0),
+            "tokens_match": tokens["serial"] == tokens["pipelined"],
         }
-        if sched.two_phase:
-            # the bucket law: phase-2 signatures are bounded by the product
-            # of observed batch buckets, nnzb buckets, and token shapes
-            # (decode S=1 + one per distinct prompt length)
-            prompt_shapes = len({len(p) for _, p, _ in
-                                 synth_trace(**trace_kw)}) + 1
-            entry.update(
-                nnzb_buckets=s["nnzb_buckets"],
-                compile_signatures=s["compile_signatures"],
-                signature_bound=(len(s["batch_buckets"]) + 1)
-                * max(1, len(s["nnzb_buckets"])) * prompt_shapes)
-        out[backend] = entry
+        out[backend] = e
     return out
 
 
@@ -159,6 +196,17 @@ def main():
                       f"bound={e['signature_bound']};"
                       f"batch_buckets={e['batch_buckets']};"
                       f"nnzb_buckets={e['nnzb_buckets']}"))
+        ab = e["ab"]
+        print(row(f"serve/{backend}/pipelined_tok_per_s",
+                  ab["pipelined_tok_per_s"],
+                  f"serial={ab['serial_tok_per_s']:.1f};"
+                  f"speedup={ab['decode_speedup']:.2f}x;"
+                  f"p50={ab['serial_p50_ms']:.1f}->"
+                  f"{ab['pipelined_p50_ms']:.1f}ms;"
+                  f"p99={ab['serial_p99_ms']:.1f}->"
+                  f"{ab['pipelined_p99_ms']:.1f}ms;"
+                  f"route_hidden={100 * ab['route_hidden_frac']:.0f}%;"
+                  f"tokens_match={ab['tokens_match']}"))
     path = emit_bench("serve", payload)
     print(f"wrote {path}")
 

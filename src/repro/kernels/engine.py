@@ -26,6 +26,7 @@ devices.  On CPU the kernels run in interpret mode automatically.
 """
 from __future__ import annotations
 
+import collections
 import functools
 import os
 import warnings
@@ -163,6 +164,67 @@ def batch_bucket(n: int, *, minimum: int = 1, cap: Optional[int] = None) -> int:
     allocation time, so the clamp never produces a non-bucket shape)."""
     b = stream_bucket(n, minimum=minimum)
     return min(b, cap) if cap is not None else b
+
+
+class StreamPipeline:
+    """Depth-bounded in-flight buffer for routed dispatch streams: the
+    serving-loop analogue of the SpMM kernel's double-buffered K-tiles.
+
+    The pipelined two-phase serving loop routes layer L+1 on host while
+    layer L's compiled execute phase is still in flight on the device.
+    This buffer is the explicit two-slot structure bounding that overlap:
+    :meth:`push` enqueues a freshly *dispatched* (not awaited) execute
+    result together with the routed plan/stream that produced it -- keeping
+    the stream's device buffers referenced while the kernel consumes them --
+    then blocks the oldest entry out whenever more than ``depth`` are in
+    flight.
+
+    * ``depth=0`` -- every push drains immediately: fully serial, the
+      pre-pipelining ``block_until_ready``-per-layer behavior bit-for-bit.
+    * ``depth=1`` -- one execute rides in flight behind the host's route
+      work for the next layer (double buffering); pushing the next execute
+      first waits out the previous one.
+
+    :meth:`busy` probes (``jax.Array.is_ready``, failing closed to "in
+    flight" if a jax version drops the probe) whether an in-flight execute
+    is still running on the device -- what the serving loop samples at
+    route entry to attribute the route fetch wait as *hidden* behind
+    device compute rather than serial with it."""
+
+    def __init__(self, depth: int = 0):
+        if depth not in (0, 1):
+            raise ValueError(
+                f"StreamPipeline depth must be 0 (serial) or 1 (double "
+                f"buffered), got {depth!r}")
+        self.depth = depth
+        self.pushes = 0
+        self._inflight: collections.deque = collections.deque()
+
+    def __len__(self) -> int:
+        return len(self._inflight)
+
+    def push(self, tag, handle) -> None:
+        """Enqueue a dispatched result; block the oldest out beyond depth."""
+        self._inflight.append((tag, handle))
+        self.pushes += 1
+        while len(self._inflight) > self.depth:
+            _, h = self._inflight.popleft()
+            jax.block_until_ready(h)
+
+    def busy(self) -> bool:
+        """Is any in-flight entry still executing on the device?"""
+        for _, h in self._inflight:
+            for leaf in jax.tree.leaves(h):
+                is_ready = getattr(leaf, "is_ready", None)
+                if is_ready is None or not is_ready():
+                    return True
+        return False
+
+    def drain(self) -> None:
+        """Block every in-flight entry out (phase boundary / loop reset)."""
+        while self._inflight:
+            _, h = self._inflight.popleft()
+            jax.block_until_ready(h)
 
 
 def _pad_dim(x: jax.Array, dim: int, multiple: int, value=0) -> jax.Array:

@@ -36,10 +36,24 @@ Two drivers share one phase machinery (:class:`_ServeBase`):
   occupancy, sampling keys) is independent of which neighbours share the
   batch.
 
-All timings block on device results (``jax.block_until_ready``) before
-reading the clock -- async dispatch otherwise makes tok/s meaningless --
-and *drain* pending device work before starting a phase clock, so queued
-compute from the previous phase is never misattributed.
+Both drivers take a ``pipeline_depth`` knob (default 0):
+
+* ``pipeline_depth=0`` -- fully serial, the pre-pipelining behavior
+  bit-for-bit: every phase blocks on device results
+  (``jax.block_until_ready``) before reading the clock and *drains* pending
+  device work before starting a phase clock, so queued compute from the
+  previous phase is never misattributed.
+* ``pipeline_depth=1`` -- the pipelined hot path: each attn+moe layer's
+  route phase 1 is fused into its jitted attention step (dispatched one
+  program ahead; only the small slot stream is fetched to host, never the
+  hidden state), the compiled execute phase stays *in flight* on the device
+  behind the next layer's host route work (``engine.StreamPipeline``, the
+  serving-loop analogue of the kernels' double-buffered K-tiles), and
+  sampling runs on device so the only per-step host sync left is the token
+  fetch (``ServeScheduler``) or nothing at all until the final drain
+  (``ServeLoop``).  Generated tokens are bit-identical to depth 0
+  (tests/test_serve_pipeline.py); ``summary()["timing"]`` reports how much
+  route time the overlap actually hid (``route_hidden_frac``).
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --smoke \
@@ -53,6 +67,7 @@ import argparse
 import collections
 import contextlib
 import dataclasses
+import functools
 import time
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
@@ -88,6 +103,42 @@ def _percentiles_ms(seconds: List[float]) -> Dict[str, float]:
             "mean": float(a.mean()), "n": int(a.size)}
 
 
+@functools.lru_cache(maxsize=None)
+def _sampler_jit(vocab: int, temperature: float, per_row_keys: bool):
+    """On-device sampler for the pipelined hot path: the same math as the
+    eager ``_sample``/``_sample_one`` (vocab slice, argmax or categorical),
+    fused into one compiled program so the sampled token array can feed the
+    next step without any host fetch of the logits.
+
+    ``per_row_keys=False`` takes one key for the whole batch and returns
+    ``(B, 1)`` int32 (the ``ServeLoop`` shape); ``per_row_keys=True`` takes
+    a ``(B, 2)`` stack of per-request keys and vmaps the categorical over
+    rows, returning ``(B,)`` int32 -- bit-identical per row to sampling
+    that row alone with its own key (the scheduler's composition-
+    independence law).  Greedy (temperature 0) ignores the key operand."""
+    if temperature > 0:
+        if per_row_keys:
+            def fn(logits, keys):
+                lg = logits[:, :vocab] / temperature
+                return jax.vmap(jax.random.categorical)(
+                    keys, lg).astype(jnp.int32)
+        else:
+            def fn(logits, key):
+                lg = logits[:, :vocab] / temperature
+                return jax.random.categorical(
+                    key, lg)[:, None].astype(jnp.int32)
+    else:
+        if per_row_keys:
+            def fn(logits, keys):
+                return jnp.argmax(logits[:, :vocab],
+                                  axis=-1).astype(jnp.int32)
+        else:
+            def fn(logits, key):
+                return jnp.argmax(logits[:, :vocab],
+                                  axis=-1)[:, None].astype(jnp.int32)
+    return jax.jit(fn)
+
+
 class _ServeBase:
     """Phase machinery shared by the static-batch :class:`ServeLoop` and the
     continuous-batching :class:`ServeScheduler`: dispatch-backend selection,
@@ -96,7 +147,7 @@ class _ServeBase:
 
     def __init__(self, params, cfg, *, dispatch: Optional[str] = None,
                  two_phase: Optional[bool] = None, temperature: float = 0.0,
-                 sample_seed: int = 3):
+                 sample_seed: int = 3, pipeline_depth: int = 0):
         self.params, self.cfg = params, cfg
         self.backend = dispatch or cfg.moe_dispatch
         has_moe = any(k == "attn+moe" for k in cfg.block_unit)
@@ -107,6 +158,9 @@ class _ServeBase:
         self._sample_key = jax.random.PRNGKey(sample_seed)
         self.stats: List[StepStat] = []
         self._exec_keys: set = set()   # distinct phase-2 compile signatures
+        self.pipeline_depth = int(pipeline_depth)
+        # validates the depth (0 = serial, 1 = double-buffered)
+        self._pipe = engine.StreamPipeline(self.pipeline_depth)
 
     # ------------------------------------------------------------- phases --
 
@@ -129,59 +183,119 @@ class _ServeBase:
         finally:
             pctx.MOE_DISPATCH = prev
 
-    def _moe_two_phase(self, p_ffn, h, cfg, counts=None, pos=None):
+    def _moe_two_phase(self, p_ffn, h, cfg, counts=None, pos=None,
+                       phase1=None):
         """The route -> execute stage injected at every attn+moe layer.
 
-        The drain on ``h`` happens BEFORE the route clock starts: ``h`` is
-        the async result of the attention half of the layer, and blocking on
-        it inside the timer would charge that queued device compute to
-        "route" (the pre-PR-6 misattribution), poisoning per-phase stats and
-        any latency percentile built on them."""
-        h = jax.block_until_ready(h)
-        t0 = time.monotonic()
-        plan, info = moe.route_moe(p_ffn, h, cfg, counts=counts, pos=pos,
-                                   dispatch=self.backend)
+        Serial mode (``pipeline_depth=0``): the drain on ``h`` happens
+        BEFORE the route clock starts -- ``h`` is the async result of the
+        attention half of the layer, and blocking on it inside the timer
+        would charge that queued device compute to "route" (the pre-PR-6
+        misattribution) -- and the execute result is blocked on, so every
+        phase wall is honest device time.
+
+        Pipelined mode (``pipeline_depth=1``): no drains anywhere.  The
+        model's fused attention+route program already dispatched this
+        layer's routing arrays (``phase1``), so the route stage is just the
+        small slot-stream fetch + host compaction
+        (``moe.plan_from_phase1``); the freshly dispatched execute is
+        pushed into the stream pipeline instead of blocked on, riding in
+        flight behind the *next* layer's host route work.  Route stats then
+        carry ``hidden_s``: the fetch wait observed while an execute was
+        genuinely still running on the device -- route time hidden behind
+        device compute (0 by construction at depth 0)."""
         step = self._step_label()
-        self.stats.append(StepStat("route", step, time.monotonic() - t0,
-                                   tokens=h.shape[0] * h.shape[1],
-                                   extra=dict(info)))
+        pipelined = self.pipeline_depth > 0
+        drain_s = 0.0
+        if not pipelined:
+            t_d = time.monotonic()
+            h = jax.block_until_ready(h)
+            drain_s = time.monotonic() - t_d
+        busy = pipelined and self._pipe.busy()
+        t0 = time.monotonic()
+        if phase1 is not None:
+            plan, info = moe.plan_from_phase1(phase1, cfg,
+                                              dispatch=self.backend,
+                                              dtype=h.dtype)
+        else:
+            plan, info = moe.route_moe(p_ffn, h, cfg, counts=counts,
+                                       pos=pos, dispatch=self.backend)
+        self.stats.append(StepStat(
+            "route", step, time.monotonic() - t0,
+            tokens=h.shape[0] * h.shape[1],
+            extra={**info, "drain_s": drain_s, "pipelined": pipelined,
+                   "hidden_s": info.get("wait_s", 0.0) if busy else 0.0}))
         sig = (plan.capacity, plan.backend, tuple(h.shape),
                None if plan.stream is None
                else (plan.stream.nnzb,) + tuple(plan.stream.shape))
         self._exec_keys.add(sig)
         t0 = time.monotonic()
         out, new_counts = moe.execute_moe_jit(p_ffn, h, plan, cfg)
-        out = jax.block_until_ready(out)
+        # depth 0: push blocks immediately (the serial execute wall);
+        # depth 1: the execute stays in flight behind the next host route
+        self._pipe.push(plan, out)
         self.stats.append(StepStat(
             "execute", step, time.monotonic() - t0,
             tokens=h.shape[0] * h.shape[1],
             extra={"nnzb_stream": info.get("nnzb_stream"),
-                   "compile_signatures": len(self._exec_keys)}))
+                   "compile_signatures": len(self._exec_keys),
+                   "dispatch_only": pipelined}))
         return out, new_counts
 
     def _phase_summary(self) -> Dict[str, Any]:
         """Aggregate per-phase seconds / call counts.  The phases are NOT
         disjoint in two-phase mode: each "decode" step stat (and every
         "prefill" stat) times the whole layered pass, *inclusive* of the
-        "route" / "execute" layer calls made inside it."""
+        "route" / "execute" layer calls made inside it.
+
+        ``timing`` is the attribution split: ``host_route_ms`` is the route
+        phase minus its device fetch wait (pure host routing work),
+        ``device_execute_ms`` / ``execute_dispatch_ms`` separate blocked
+        execute walls (serial mode) from dispatch-only walls (pipelined
+        mode) -- the pre-PR-7 summary folded the device-queue drain into
+        whichever phase blocked first.  ``route_hidden_ms`` /
+        ``route_hidden_frac`` report how much of the route phase ran while
+        an execute was in flight on the device: the overlap efficiency of
+        the pipelined mode, exactly 0 at depth 0."""
         out: Dict[str, Any] = {}
-        for phase in ("prefill", "route", "execute", "decode"):
+        for phase in ("prefill", "route", "execute", "decode", "drain"):
             ss = [s for s in self.stats if s.phase == phase]
             if ss:
                 out[phase] = {"seconds": sum(s.seconds for s in ss),
                               "calls": len(ss)}
+        routes = [s for s in self.stats if s.phase == "route"]
+        execs = [s for s in self.stats if s.phase == "execute"]
+        if routes or execs:
+            route_s = sum(s.seconds for s in routes)
+            wait_s = sum(s.extra.get("wait_s", 0.0) for s in routes)
+            hidden_s = sum(s.extra.get("hidden_s", 0.0) for s in routes)
+            out["timing"] = {
+                "host_route_ms": (route_s - wait_s) * 1e3,
+                "route_wait_ms": wait_s * 1e3,
+                "attn_drain_ms": sum(s.extra.get("drain_s", 0.0)
+                                     for s in routes) * 1e3,
+                "device_execute_ms": sum(
+                    s.seconds for s in execs
+                    if not s.extra.get("dispatch_only")) * 1e3,
+                "execute_dispatch_ms": sum(
+                    s.seconds for s in execs
+                    if s.extra.get("dispatch_only")) * 1e3,
+                "route_hidden_ms": hidden_s * 1e3,
+                "route_hidden_frac": (hidden_s / route_s
+                                      if route_s > 0 else 0.0),
+            }
         if self.two_phase:
-            routes = [s for s in self.stats if s.phase == "route"
-                      and "nnzb_stream" in s.extra]
-            if routes:
+            streams = [s for s in routes if "nnzb_stream" in s.extra]
+            if streams:
                 out["stream"] = {
                     "nnzb_stream_mean": float(np.mean(
-                        [s.extra["nnzb_stream"] for s in routes])),
+                        [s.extra["nnzb_stream"] for s in streams])),
                     "nnzb_routed_mean": float(np.mean(
-                        [s.extra["nnzb_routed"] for s in routes])),
-                    "grid_nnzb": routes[-1].extra["grid_nnzb"],
+                        [s.extra["nnzb_routed"] for s in streams])),
+                    "grid_nnzb": streams[-1].extra["grid_nnzb"],
                 }
             out["compile_signatures"] = len(self._exec_keys)
+        out["pipeline"] = {"depth": self.pipeline_depth}
         return out
 
 
@@ -199,14 +313,20 @@ class ServeLoop(_ServeBase):
         backend is "bcsr" -- the combination where single-phase jit degrades
         to full-grid streams.
     temperature : 0 = greedy argmax, > 0 = categorical sampling.
+    pipeline_depth : 0 = fully serial (every step blocks, the pre-PR-7
+        behavior bit-for-bit); 1 = pipelined hot path (route-ahead fused
+        programs, executes in flight behind host routing, on-device
+        sampling -- token-identical to depth 0, see module docstring).
     """
 
     def __init__(self, params, cfg, *, max_seq: int,
                  dispatch: Optional[str] = None,
                  two_phase: Optional[bool] = None,
-                 temperature: float = 0.0, sample_seed: int = 3):
+                 temperature: float = 0.0, sample_seed: int = 3,
+                 pipeline_depth: int = 0):
         super().__init__(params, cfg, dispatch=dispatch, two_phase=two_phase,
-                         temperature=temperature, sample_seed=sample_seed)
+                         temperature=temperature, sample_seed=sample_seed,
+                         pipeline_depth=pipeline_depth)
         self.max_seq = max_seq
         self._decode_fused = jax.jit(
             lambda p, c, pos, tok: M.decode_step(p, cfg, c, pos, tok))
@@ -240,13 +360,15 @@ class ServeLoop(_ServeBase):
         if self.two_phase:
             logits, cache, pos = M.prefill_layered(
                 self.params, prompts, self.cfg, max_seq=self.max_seq,
-                embeddings=embeddings, moe_fn=self._moe_two_phase)
+                embeddings=embeddings, moe_fn=self._moe_two_phase,
+                route_ahead=self.pipeline_depth > 0)
         else:
             with self._dispatch_ctx():
                 logits, cache, pos = M.prefill(self.params, prompts, self.cfg,
                                                max_seq=self.max_seq,
                                                embeddings=embeddings)
         logits, cache = jax.block_until_ready((logits, cache))
+        self._pipe.drain()   # prefill executes all completed with logits
         self.stats.append(StepStat(
             "prefill", -1, time.monotonic() - t0,
             tokens=int(np.prod(prompts.shape))))
@@ -264,6 +386,19 @@ class ServeLoop(_ServeBase):
             nxt = jnp.argmax(lg, axis=-1)
         return nxt[:, None].astype(jnp.int32)
 
+    def _sample_device(self, last_logits: jax.Array) -> jax.Array:
+        """Pipelined-mode sampling: same math as :meth:`_sample` (same key
+        chain -- the split still happens eagerly on host), but the
+        argmax/categorical runs as one jitted program whose (B, 1) token
+        output feeds the next step's embedding lookup *on device* -- no
+        host sync anywhere in the decode chain."""
+        if self.temperature > 0:
+            self._sample_key, k = jax.random.split(self._sample_key)
+        else:
+            k = self._sample_key   # unused by the greedy program
+        return _sampler_jit(self.cfg.vocab_size, float(self.temperature),
+                            False)(last_logits, k)
+
     def decode_step(self) -> jax.Array:
         """Generate one token for every sequence in the batch."""
         if self.cache is None:
@@ -280,26 +415,48 @@ class ServeLoop(_ServeBase):
                 f"(prefill filled {self.pos}, this is generated token "
                 f"{step + 2}). Raise max_seq or generate fewer tokens.")
         tok = self.generated[-1]
+        pipelined = self.pipeline_depth > 0
         t0 = time.monotonic()
         if self.two_phase:
             logits, self.cache = M.decode_step_layered(
                 self.params, self.cfg, self.cache, pos, tok,
-                moe_fn=self._moe_two_phase)
+                moe_fn=self._moe_two_phase, route_ahead=pipelined)
         else:
             with self._dispatch_ctx():
                 logits, self.cache = self._decode_fused(
                     self.params, self.cache, jnp.asarray(pos, jnp.int32),
                     tok)
-        logits = jax.block_until_ready(logits)
-        self.stats.append(StepStat("decode", step, time.monotonic() - t0,
-                                   tokens=tok.shape[0]))
-        nxt = self._sample(logits[:, -1])
+        if pipelined:
+            # no host sync at all: the sampled token array feeds the next
+            # step's embedding on device; the step wall is dispatch time
+            # (the device drains at the end of decode() -- the drain stat)
+            nxt = self._sample_device(logits[:, -1])
+            self.stats.append(StepStat("decode", step,
+                                       time.monotonic() - t0,
+                                       tokens=tok.shape[0],
+                                       extra={"dispatch_only": True}))
+        else:
+            t_b = time.monotonic()
+            logits = jax.block_until_ready(logits)
+            t_done = time.monotonic()
+            self.stats.append(StepStat(
+                "decode", step, t_done - t0, tokens=tok.shape[0],
+                extra={"logits_wait_s": t_done - t_b}))
+            nxt = self._sample(logits[:, -1])
         self.generated.append(nxt)
         return nxt
 
     def decode(self, n: int):
         for _ in range(n):
             self.decode_step()
+        if self.pipeline_depth > 0 and self.generated:
+            # the one host sync of the pipelined decode phase: drain the
+            # whole dispatched chain (tokens + cache + in-flight executes)
+            t0 = time.monotonic()
+            jax.block_until_ready((self.generated[-1], self.cache))
+            self._pipe.drain()
+            self.stats.append(StepStat("drain", len(self.generated) - 2,
+                                       time.monotonic() - t0))
 
     # -------------------------------------------------------------- drive --
 
@@ -315,6 +472,7 @@ class ServeLoop(_ServeBase):
         ``run()`` after the first irreproducible."""
         self.stats.clear()
         self._exec_keys.clear()
+        self._pipe.drain()
         self._sample_key = (jax.random.PRNGKey(self._sample_seed)
                             if sample_key is None else sample_key)
         self.prefill(prompts, embeddings=embeddings)
@@ -328,12 +486,18 @@ class ServeLoop(_ServeBase):
         step stat (and the "prefill" stat) times the whole layered pass,
         *inclusive* of the "route" / "execute" layer calls made inside it
         (those entries break the pass down; do not sum them with "decode"
-        or "prefill")."""
+        or "prefill").
+
+        In pipelined mode the decode-step stats are dispatch walls; the
+        final "drain" stat is the real device wait, so tok/s is computed
+        over decode + drain -- honest wall-clock either way."""
         out = self._phase_summary()
         dec = out.get("decode")
-        if dec and dec["seconds"] > 0:
-            batch = self.generated[0].shape[0] if self.generated else 0
-            out["decode"]["tok_per_s"] = batch * dec["calls"] / dec["seconds"]
+        if dec:
+            wall = dec["seconds"] + out.get("drain", {}).get("seconds", 0.0)
+            if wall > 0:
+                batch = self.generated[0].shape[0] if self.generated else 0
+                out["decode"]["tok_per_s"] = batch * dec["calls"] / wall
         return out
 
 
@@ -401,9 +565,11 @@ class ServeScheduler(_ServeBase):
                  dispatch: Optional[str] = None,
                  two_phase: Optional[bool] = None,
                  temperature: float = 0.0, sample_seed: int = 3,
-                 batch_min_bucket: int = 1, cache_dtype=jnp.bfloat16):
+                 batch_min_bucket: int = 1, cache_dtype=jnp.bfloat16,
+                 pipeline_depth: int = 0):
         super().__init__(params, cfg, dispatch=dispatch, two_phase=two_phase,
-                         temperature=temperature, sample_seed=sample_seed)
+                         temperature=temperature, sample_seed=sample_seed,
+                         pipeline_depth=pipeline_depth)
         self.max_seq = max_seq
         self.batch_min_bucket = batch_min_bucket
         # allocate the slot pool at its own bucket so every step bucket,
@@ -479,13 +645,15 @@ class ServeScheduler(_ServeBase):
         if self.two_phase:
             logits, cache1, pos = M.prefill_layered(
                 self.params, prompts, self.cfg, max_seq=self.max_seq,
-                cache_dtype=self.cache_dtype, moe_fn=self._moe_two_phase)
+                cache_dtype=self.cache_dtype, moe_fn=self._moe_two_phase,
+                route_ahead=self.pipeline_depth > 0)
         else:
             with self._dispatch_ctx():
                 logits, cache1, pos = M.prefill(
                     self.params, prompts, self.cfg, max_seq=self.max_seq,
                     cache_dtype=self.cache_dtype)
         logits, cache1 = jax.block_until_ready((logits, cache1))
+        self._pipe.drain()   # prefill executes all completed with logits
         dt = time.monotonic() - t0
         self.stats.append(StepStat("prefill", self.step_idx, dt,
                                    tokens=req.prompt_len,
@@ -547,21 +715,47 @@ class ServeScheduler(_ServeBase):
                 tok_vec[i, 0] = r.tokens[-1]
         step_cache = jax.tree.map(lambda a: a[:, :bucket], self.cache)
         self._stat_step = self.step_idx
+        pipelined = self.pipeline_depth > 0
         t0 = time.monotonic()
         if self.two_phase:
             logits, new_cache = M.decode_step_layered(
                 self.params, self.cfg, step_cache, pos_vec,
-                jnp.asarray(tok_vec), moe_fn=self._moe_two_phase)
+                jnp.asarray(tok_vec), moe_fn=self._moe_two_phase,
+                route_ahead=pipelined)
         else:
             with self._dispatch_ctx():
                 logits, new_cache = self._decode_fused(
                     self.params, step_cache, jnp.asarray(pos_vec),
                     jnp.asarray(tok_vec))
-        logits = jax.block_until_ready(logits)
+        toks = None
+        if pipelined:
+            # sample on device (per-request key chains advance on host,
+            # exactly as _sample_one's) and fetch ONLY the (bucket,) token
+            # ids -- the single per-step host sync the scheduler cannot
+            # shed: EOS / eviction decisions need the values
+            if self.temperature > 0:
+                keys, dummy = [], None
+                for r in self.slots[:bucket]:
+                    if r is not None:
+                        r.key, k = jax.random.split(r.key)
+                        keys.append(k)
+                    else:   # vacant row: sampled then masked; any key works
+                        if dummy is None:
+                            dummy = jnp.zeros((2,), jnp.uint32)
+                        keys.append(dummy)
+                key_arr = jnp.stack(keys)
+            else:
+                key_arr = jnp.zeros((bucket, 2), jnp.uint32)
+            toks = np.asarray(_sampler_jit(
+                self.cfg.vocab_size, float(self.temperature), True)(
+                    logits[:, -1], key_arr))
+        else:
+            logits = jax.block_until_ready(logits)
         dt = time.monotonic() - t0
         self.stats.append(StepStat(
             "decode", self.step_idx, dt, tokens=len(active),
-            extra={"batch_bucket": bucket, "active": len(active)}))
+            extra={"batch_bucket": bucket, "active": len(active),
+                   "pipelined": pipelined}))
         self.cache = jax.tree.map(
             lambda big, small: big.at[:, :bucket].set(
                 small.astype(big.dtype)),
@@ -570,7 +764,8 @@ class ServeScheduler(_ServeBase):
         for i, r in enumerate(self.slots[:bucket]):
             if r is None:
                 continue   # vacant bucket row: computed, masked out here
-            tok = self._sample_one(logits[i, -1], r)
+            tok = (int(toks[i]) if toks is not None
+                   else self._sample_one(logits[i, -1], r))
             r.tokens.append(tok)
             r.latencies_s.append(dt)
             r.pos += 1
@@ -643,6 +838,10 @@ def main():
     ap.add_argument("--two-phase", choices=["auto", "on", "off"],
                     default="auto",
                     help="route-then-compile decode (auto = when moe+bcsr)")
+    ap.add_argument("--pipeline-depth", type=int, choices=[0, 1], default=0,
+                    help="0 = serial (block every phase), 1 = pipelined "
+                         "(route-ahead + in-flight executes + on-device "
+                         "sampling; token-identical to 0)")
     ap.add_argument("--continuous", action="store_true",
                     help="drive the continuous-batching scheduler on a "
                          "synthetic multi-user trace instead of one static "
@@ -667,7 +866,8 @@ def main():
         sched = ServeScheduler(
             params, cfg, max_seq=max_seq, max_slots=args.slots,
             dispatch=dispatch, two_phase=two_phase,
-            temperature=args.temperature)
+            temperature=args.temperature,
+            pipeline_depth=args.pipeline_depth)
         for _ in range(args.requests):
             plen = int(rng.integers(max(2, args.prompt_len // 2),
                                     args.prompt_len + 1))
@@ -687,6 +887,11 @@ def main():
               + (f"; nnzb buckets: {s['nnzb_buckets']}; "
                  f"{s['compile_signatures']} phase-2 signature(s)"
                  if sched.two_phase else ""))
+        if args.pipeline_depth and "timing" in s:
+            tm = s["timing"]
+            print(f"overlap: {tm['route_hidden_ms']:.1f} ms of route hidden "
+                  f"behind in-flight execute "
+                  f"({100 * tm['route_hidden_frac']:.0f}% of route)")
         for uid in sorted(gen)[:2]:
             print(f"  [{uid}] {gen[uid][:16].tolist()}")
         return
@@ -702,7 +907,7 @@ def main():
 
     loop = ServeLoop(
         params, cfg, max_seq=max_seq, dispatch=dispatch, two_phase=two_phase,
-        temperature=args.temperature)
+        temperature=args.temperature, pipeline_depth=args.pipeline_depth)
     gen = loop.run(prompts, args.gen, embeddings=emb)
     s = loop.summary()
 
@@ -722,6 +927,11 @@ def main():
         print(f"stream:  nnzb {st['nnzb_stream_mean']:.1f} (bucketed) vs "
               f"{st['grid_nnzb']} full-grid blocks; "
               f"{s['compile_signatures']} phase-2 compile signature(s)")
+    if args.pipeline_depth and "timing" in s:
+        tm = s["timing"]
+        print(f"overlap: {tm['route_hidden_ms']:.1f} ms of route hidden "
+              f"behind in-flight execute "
+              f"({100 * tm['route_hidden_frac']:.0f}% of route)")
     print("sample generations (token ids):")
     for b in range(min(args.batch, 2)):
         print(f"  [{b}] {gen[b, :16].tolist()}")

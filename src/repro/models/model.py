@@ -559,6 +559,30 @@ def _layer_decode_attn_head_jit(cfg: ArchConfig):
 
 
 @functools.lru_cache(maxsize=None)
+def _layer_decode_attn_route_jit(cfg: ArchConfig, capacity: int):
+    """The attention half of an attn+moe decode layer FUSED with MoE route
+    phase 1 (``moe.route_phase1``): ln1 + attention + residual + ln2 +
+    router matmul + prefix-stable slot cumsums, one program.  The pipelined
+    serving loop (``pipeline_depth=1``) uses this so each layer's routing
+    arrays are dispatched *with* its attention -- one program ahead of the
+    host route stage -- and the host then fetches only the small ``(B, S)``
+    slot stream (``moe.plan_from_phase1``), never the hidden state.
+    ``capacity`` is the static dispatch capacity the slot encoding assumes
+    (always 1 for single-token decode, see ``moe.dispatch_capacity``)."""
+    def fn(p, x, attn_cache, counts, pos):
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        a, new_attn = L.apply_attention(
+            p["attn"], h, cfg, window=None, impl="chunked", cache=attn_cache,
+            cache_len=pos, collect_kv=0)
+        x = x + a
+        h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        ph1 = moe.route_phase1(p["ffn"]["router"], h, cfg, counts, pos,
+                               capacity)
+        return x, h, new_attn, ph1
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
 def _layer_prefill_jit(cfg: ArchConfig, kind: str, collect_kv: int,
                        impl: str):
     """Whole-layer prefill step (cache-collecting forward)."""
@@ -579,6 +603,24 @@ def _layer_prefill_attn_head_jit(cfg: ArchConfig, kind: str, collect_kv: int,
         x = x + a
         h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
         return x, h, new_attn
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _layer_prefill_attn_route_jit(cfg: ArchConfig, kind: str,
+                                  collect_kv: int, impl: str, capacity: int):
+    """Prefill twin of :func:`_layer_decode_attn_route_jit`: attention half
+    fused with MoE route phase 1 for a fresh sequence (zero occupancy,
+    position 0); ``capacity`` is static per prompt length."""
+    def fn(p, x):
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        a, new_attn = L.apply_attention(
+            p["attn"], h, cfg, window=_window_for(kind, cfg), impl=impl,
+            cache=None, cache_len=None, collect_kv=collect_kv)
+        x = x + a
+        h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        ph1 = moe.route_phase1(p["ffn"]["router"], h, cfg, None, 0, capacity)
+        return x, h, new_attn, ph1
     return jax.jit(fn)
 
 
@@ -610,7 +652,8 @@ def _tree_stack(per_step):
 
 
 def decode_step_layered(params: Params, cfg: ArchConfig, cache, pos,
-                        tokens_1, dtype=jnp.bfloat16, *, moe_fn=None
+                        tokens_1, dtype=jnp.bfloat16, *, moe_fn=None,
+                        route_ahead: bool = False
                         ) -> Tuple[jax.Array, Any]:
     """One-token decode with the repeat loop unrolled at the Python level.
 
@@ -634,6 +677,14 @@ def decode_step_layered(params: Params, cfg: ArchConfig, cache, pos,
     against the silent out-of-bounds write clamp.  ``dtype`` is accepted for
     signature parity with :func:`decode_step` and (like there) unused: cache
     dtypes follow the cache arrays themselves.
+
+    ``route_ahead=True`` (the pipelined serving path) fuses MoE route
+    phase 1 into each attn+moe layer's jitted attention step
+    (:func:`_layer_decode_attn_route_jit`) and hands the resulting
+    ``moe.Phase1`` to ``moe_fn`` as the ``phase1`` keyword -- the routing
+    arrays are dispatched one program ahead of the host route stage, so the
+    host only ever fetches the small slot stream, never the hidden state.
+    The computed values are identical to ``route_ahead=False``.
     """
     check_cache_fits(cache, pos, who="decode_step_layered")
     pol = precision_policy(cfg.policy)
@@ -643,13 +694,23 @@ def decode_step_layered(params: Params, cfg: ArchConfig, cache, pos,
     new_cache = dict(cache)
     pos_t = jnp.asarray(pos, jnp.int32)  # traced side; host moe keeps `pos`
     take, restack = _tree_take, _tree_stack
+    if route_ahead:
+        # same capacity route_moe would compute (C = 1 for S = 1 decode)
+        route_cap = moe.dispatch_capacity(tokens_1.shape[1], cfg, pos0=pos)
 
     def layered_block(kind, p_i, x, c_i):
         if kind == "attn+moe" and moe_fn is not None:
-            x, h, new_attn = _layer_decode_attn_head_jit(cfg)(
-                p_i, x, c_i["attn"], pos_t)
-            f, moe_counts = moe_fn(p_i["ffn"], h, cfg,
-                                   counts=c_i.get("moe"), pos=pos)
+            if route_ahead:
+                x, h, new_attn, ph1 = _layer_decode_attn_route_jit(
+                    cfg, route_cap)(p_i, x, c_i["attn"], c_i["moe"], pos_t)
+                f, moe_counts = moe_fn(
+                    p_i["ffn"], h, cfg, counts=c_i.get("moe"), pos=pos,
+                    phase1=moe.Phase1(*ph1, route_cap))
+            else:
+                x, h, new_attn = _layer_decode_attn_head_jit(cfg)(
+                    p_i, x, c_i["attn"], pos_t)
+                f, moe_counts = moe_fn(p_i["ffn"], h, cfg,
+                                       counts=c_i.get("moe"), pos=pos)
             return x + f, {"attn": new_attn, "moe": moe_counts}
         return _layer_decode_jit(cfg, kind)(p_i, x, c_i, pos_t)
 
@@ -692,7 +753,7 @@ def decode_step_layered(params: Params, cfg: ArchConfig, cache, pos,
 def prefill_layered(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
                     max_seq: int, embeddings: Optional[jax.Array] = None,
                     impl: str = "chunked", cache_dtype=jnp.bfloat16,
-                    moe_fn=None):
+                    moe_fn=None, route_ahead: bool = False):
     """Serving prefill, layer by layer: same function as :func:`prefill`
     but with the repeat loop unrolled in Python so a serving loop can
     interleave host work (two-phase MoE routing) between layers.  This is
@@ -701,7 +762,10 @@ def prefill_layered(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
     Each layer runs as a cached jitted step; ``moe_fn`` (signature of
     ``moe.apply_moe``) is injected at every attn+moe block with
     ``counts=None, pos=None`` -- a fresh sequence at position 0, exactly the
-    fused prefill's routing state."""
+    fused prefill's routing state.  ``route_ahead=True`` fuses route
+    phase 1 into each attn+moe layer's jitted attention step and passes the
+    resulting ``moe.Phase1`` to ``moe_fn`` (see
+    :func:`decode_step_layered`); values are identical either way."""
     pol = precision_policy(cfg.policy)
     cd = pol.compute_dtype
     x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
@@ -711,12 +775,22 @@ def prefill_layered(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
     shared_p = params.get("shared_attn")
     cache: Dict[str, Any] = {}
     take, restack = _tree_take, _tree_stack
+    if route_ahead:
+        route_cap = moe.dispatch_capacity(S_total, cfg, pos0=0)
 
     def layered_block(kind, p_i, x):
         if kind == "attn+moe" and moe_fn is not None:
-            x, h, new_attn = _layer_prefill_attn_head_jit(
-                cfg, kind, max_seq, impl)(p_i, x)
-            f, moe_counts = moe_fn(p_i["ffn"], h, cfg, counts=None, pos=None)
+            if route_ahead:
+                x, h, new_attn, ph1 = _layer_prefill_attn_route_jit(
+                    cfg, kind, max_seq, impl, route_cap)(p_i, x)
+                f, moe_counts = moe_fn(p_i["ffn"], h, cfg, counts=None,
+                                       pos=None,
+                                       phase1=moe.Phase1(*ph1, route_cap))
+            else:
+                x, h, new_attn = _layer_prefill_attn_head_jit(
+                    cfg, kind, max_seq, impl)(p_i, x)
+                f, moe_counts = moe_fn(p_i["ffn"], h, cfg, counts=None,
+                                       pos=None)
             return x + f, {"attn": new_attn, "moe": moe_counts}
         return _layer_prefill_jit(cfg, kind, max_seq, impl)(p_i, x)
 

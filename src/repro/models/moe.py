@@ -57,6 +57,7 @@ Expert-parallel: the leading E dim of expert weights shards over the
 from __future__ import annotations
 
 import functools
+import time
 import warnings
 from typing import NamedTuple, Optional, Tuple
 
@@ -471,19 +472,41 @@ def _moe_tail(p, x, xe, gate, keep, flat_slot, cfg: ArchConfig, E: int,
 
 # ------------------------------------------------- two-phase serving API --
 
-@functools.partial(jax.jit, static_argnames=("cfg", "capacity"))
-def _route_phase1_jit(router, x, cfg: ArchConfig, counts, pos0, capacity):
-    """The compiled half of phase 1: router matmul + softmax/top-k + the
-    prefix-stable slot cumsums, one fused program instead of an op-by-op
-    eager chain.  ``pos0`` rides as a traced scalar so every decode step
-    reuses one compiled program; only the token shape and the static
-    dispatch capacity key the cache.  The host-side remainder of phase 1
-    (stream compaction) needs the *values*, which it reads off the returned
-    concrete arrays."""
+def route_phase1(router, x, cfg: ArchConfig, counts, pos0, capacity: int):
+    """Traceable phase-1 body: router matmul + softmax/top-k + the
+    prefix-stable slot cumsums, returning only the small per-token routing
+    arrays -- never the hidden state.  Standalone it is jitted as
+    :func:`_route_phase1_jit`; the pipelined serving path instead inlines it
+    into the model's fused attention+route layer programs
+    (``model._layer_*_attn_route_jit``) so the router output of a layer is
+    dispatched one program ahead of the host route stage."""
     r = route_tokens(router, x, cfg, counts=counts, pos0=pos0)
     flat_slot = jnp.where(r.keep, r.expert_id * capacity + r.within,
                           cfg.n_experts * capacity)
     return r.gate, r.keep, r.new_counts, flat_slot
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "capacity"))
+def _route_phase1_jit(router, x, cfg: ArchConfig, counts, pos0, capacity):
+    """The compiled half of phase 1: :func:`route_phase1` as one fused
+    program instead of an op-by-op eager chain.  ``pos0`` rides as a traced
+    scalar so every decode step reuses one compiled program; only the token
+    shape and the static dispatch capacity key the cache.  The host-side
+    remainder of phase 1 (stream compaction) needs the *values*, which it
+    reads off the returned concrete arrays (:func:`plan_from_phase1`)."""
+    return route_phase1(router, x, cfg, counts, pos0, capacity)
+
+
+class Phase1(NamedTuple):
+    """Phase-1 routing outputs plus the static dispatch capacity their slot
+    encoding assumed.  Produced by :func:`_route_phase1_jit` (via
+    :func:`route_moe`) or by the model's fused attention+route layer
+    programs; consumed by :func:`plan_from_phase1`."""
+    gate: jax.Array        # (B, S) f32 top-1 router probability
+    keep: jax.Array        # (B, S) bool prefix-capacity keep set
+    new_counts: jax.Array  # (B, E) int32 occupancy after this call
+    flat_slot: jax.Array   # (B, S) int32 in [0, E*C]  (E*C = dropped)
+    capacity: int          # static dispatch capacity C the slots encode
 
 
 @_pytree_dataclass(static=("capacity", "backend"))
@@ -560,22 +583,56 @@ def route_moe(p, x, cfg: ArchConfig, *, counts: Optional[jax.Array] = None,
     C = dispatch_capacity(S, cfg, pos0=pos0)
     # router + slot assignment run as ONE jitted program (pos0 traced, so a
     # whole decode phase reuses a single compile); the stream compaction
-    # below stays host-side -- it is the data-dependent step jit cannot do.
+    # stays host-side (plan_from_phase1) -- the data-dependent step jit
+    # cannot do.
     gate, keep, new_counts, flat_slot = _route_phase1_jit(
         p["router"], x, cfg, counts, jnp.asarray(pos0, jnp.int32), C)
+    return plan_from_phase1(Phase1(gate, keep, new_counts, flat_slot, C),
+                            cfg, dispatch=backend, dtype=x.dtype)
 
+
+def plan_from_phase1(phase1: Phase1, cfg: ArchConfig, *,
+                     dispatch: Optional[str] = None,
+                     dtype=jnp.float32) -> Tuple[MoEPlan, dict]:
+    """The host half of phase 1: fetch the ``(B, S)`` slot stream -- the
+    ONLY device->host transfer; the hidden state never crosses -- compact it
+    to the union nonzero-block :class:`BatchedBCSR` stream, and pad to its
+    power-of-two nnzb bucket.  Shared by :func:`route_moe` (which computes
+    phase 1 itself) and the pipelined serving loop (which receives phase 1
+    from the model's fused attention+route layer program, dispatched a
+    program ahead so the routing arrays are already materializing when the
+    host arrives here).
+
+    ``info`` carries the stream accounting of :func:`route_moe` plus the
+    timing split the serving loop's phase attribution wants: ``wait_s``
+    (time blocked fetching the slot stream off the device -- in pipelined
+    mode this is the window that overlaps the in-flight execute of the
+    previous layer) and ``host_s`` (pure host compaction/bucketing work)."""
+    from repro.parallel import context as pctx
+    from repro.kernels import tuning
+
+    backend = dispatch or pctx.MOE_DISPATCH or cfg.moe_dispatch
+    if backend not in ("gather", "bcsr"):
+        raise ValueError(f"unknown moe_dispatch backend {backend!r}")
+    gate, keep, new_counts, flat_slot, C = phase1
+    S = flat_slot.shape[1]
+    E = cfg.n_experts
     stream = None
-    info = {"backend": backend, "capacity": C, "tokens": S}
+    info = {"backend": backend, "capacity": C, "tokens": S,
+            "wait_s": 0.0, "host_s": 0.0}
     if backend == "bcsr":
-        tiles = tuning.moe_dispatch_tiles(d, x.dtype)
+        t0 = time.monotonic()
+        fs = np.asarray(flat_slot)      # (B, S) int32: the whole fetch
+        t1 = time.monotonic()
+        tiles = tuning.moe_dispatch_tiles(cfg.d_model, dtype)
         bm, bk = tiles["block"]
         stream, nnzb_routed, nnzb_covered = _build_routed_stream(
-            flat_slot, S, E, C, bm, bk, x.dtype,
-            min_bucket=tiles["min_bucket"])
+            fs, S, E, C, bm, bk, dtype, min_bucket=tiles["min_bucket"])
         gm, gn = stream.grid_shape
         info.update(nnzb_routed=nnzb_routed, nnzb_covered=nnzb_covered,
                     nnzb_stream=stream.nnzb, grid_nnzb=gm * gn,
-                    bucket=stream.nnzb, block=(bm, bk))
+                    bucket=stream.nnzb, block=(bm, bk),
+                    wait_s=t1 - t0, host_s=time.monotonic() - t1)
     plan = MoEPlan(gate=gate, keep=keep, new_counts=new_counts,
                    flat_slot=flat_slot, stream=stream, capacity=C,
                    backend=backend)

@@ -82,6 +82,26 @@ def test_bench_serve_smoke(serve_results):
         assert ftl["n"] == t["requests"] and ftl["p50"] > 0
 
 
+def test_bench_serve_pipelined_ab(serve_results):
+    """The serial-vs-pipelined A/B row (PR 7): the pipelined run drains the
+    same trace, emits the *same tokens*, and the hidden-route fraction is a
+    valid fraction.  (Speedup itself is not asserted at smoke shapes --
+    interpret-mode executes finish before the next route can overlap.)"""
+    for backend in ("gather", "bcsr"):
+        e = serve_results[backend]
+        assert e["pipeline_depth"] == 0        # top level stays the serial run
+        pip, ab = e["pipelined"], e["ab"]
+        assert pip["pipeline_depth"] == 1
+        assert pip["requests_finished"] == pip["trace"]["requests"]
+        assert pip["trace"]["generated_tokens"] == e["trace"]["generated_tokens"]
+        assert ab["tokens_match"] is True
+        assert ab["pipelined_tok_per_s"] > 0 and ab["serial_tok_per_s"] > 0
+        assert ab["decode_speedup"] > 0
+        assert 0.0 <= ab["route_hidden_frac"] <= 1.0
+        if e["two_phase"]:   # gather is fused: no route/execute stats
+            assert pip["timing"]["execute_dispatch_ms"] >= 0.0
+
+
 def test_bench_serve_signature_bound(serve_results):
     """The batch-bucket law holds under the synthetic trace: phase-2
     recompiles stay within the (batch-bucket x nnzb-bucket x token-shape)

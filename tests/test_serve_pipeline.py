@@ -1,0 +1,227 @@
+"""Pipelined serving (PR 7): ``pipeline_depth=1`` vs the serial loop.
+
+The contract under test (see "Pipelined serving contract" in
+``tests/README.md``): depth 1 dispatches each MoE layer's routing arrays
+one program ahead, leaves the freshly dispatched execute in flight behind
+the next layer's host route, and samples on device -- and is
+*token-identical* to depth 0, which reproduces the pre-PR-7 serial loop
+bit for bit.  Covers both drivers (ServeLoop, ServeScheduler), both
+dispatch backends (gather fused, bcsr two-phase), greedy and temperature
+sampling, mid-run scheduler join/evict, the overlap accounting
+(``route_hidden_frac`` is exactly 0 at depth 0), and the serial-mode
+timing attribution split (``host_route_ms`` vs ``device_execute_ms``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import engine
+from repro.models.config import ArchConfig
+from repro.models import model as M
+from repro.launch.serve import ServeLoop, ServeScheduler
+
+TINY = ArchConfig(
+    name="tiny-serve-pipe", family="moe", d_model=32, n_heads=2,
+    n_kv_heads=1, d_ff=48, vocab_size=64, block_unit=("attn", "attn+moe"),
+    n_repeats=2, head_dim=16, n_experts=4, top_k=1, capacity_factor=1.0,
+    moe_shared_expert=True, policy="f32")
+
+B, PROMPT, GEN = 2, 8, 6
+MAX_SEQ = PROMPT + GEN
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    params = M.init_params(jax.random.PRNGKey(0), TINY)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 0,
+                                 TINY.vocab_size)
+    return params, prompts
+
+
+# ------------------------------------------------------- StreamPipeline --
+
+
+def test_stream_pipeline_depth_semantics():
+    """Depth 0 blocks on push (the serial loop's block_until_ready); depth
+    1 keeps exactly one handle in flight; drain() empties either."""
+    pipe0 = engine.StreamPipeline(0)
+    pipe0.push("a", jnp.ones((4,)) * 2)
+    assert len(pipe0) == 0          # drained immediately: serial semantics
+    pipe1 = engine.StreamPipeline(1)
+    pipe1.push("a", jnp.ones((4,)))
+    assert len(pipe1) == 1          # one execute rides in flight
+    pipe1.push("b", jnp.ones((4,)) * 3)
+    assert len(pipe1) == 1          # pushing the next blocks on the oldest
+    pipe1.drain()
+    assert len(pipe1) == 0 and not pipe1.busy()
+    assert pipe1.pushes == 2
+    with pytest.raises(ValueError):
+        engine.StreamPipeline(2)
+
+
+# ------------------------------------------------------ ServeLoop parity --
+
+
+@pytest.mark.parametrize("dispatch", ["gather", "bcsr"])
+def test_serve_loop_pipelined_token_parity(tiny_model, dispatch):
+    """Greedy depth-1 tokens == depth-0 tokens, both backends.  The
+    pipelined run ends with a single drain stat (its one decode-phase host
+    sync) and dispatch-only decode steps."""
+    params, prompts = tiny_model
+    want = ServeLoop(params, TINY, max_seq=MAX_SEQ,
+                     dispatch=dispatch).run(prompts, GEN)
+    loop = ServeLoop(params, TINY, max_seq=MAX_SEQ, dispatch=dispatch,
+                     pipeline_depth=1)
+    got = loop.run(prompts, GEN)
+    np.testing.assert_array_equal(got, want)
+    s = loop.summary()
+    assert s["pipeline"]["depth"] == 1
+    assert s["drain"]["calls"] == 1
+    assert all(st.extra.get("dispatch_only") for st in loop.stats
+               if st.phase == "decode")
+    if dispatch == "bcsr":
+        # every decode execute was dispatch-only: nothing blocked mid-chain
+        assert all(st.extra["dispatch_only"] for st in loop.stats
+                   if st.phase == "execute" and st.step >= 0)
+
+
+@pytest.mark.parametrize("dispatch", ["gather", "bcsr"])
+def test_serve_loop_pipelined_temperature_parity(tiny_model, dispatch):
+    """Temperature > 0: the on-device sampler consumes the same key chain
+    as the serial host sampler, so the token streams are identical."""
+    params, prompts = tiny_model
+    want = ServeLoop(params, TINY, max_seq=MAX_SEQ, dispatch=dispatch,
+                     temperature=0.7, sample_seed=7).run(prompts, GEN)
+    got = ServeLoop(params, TINY, max_seq=MAX_SEQ, dispatch=dispatch,
+                    temperature=0.7, sample_seed=7,
+                    pipeline_depth=1).run(prompts, GEN)
+    np.testing.assert_array_equal(got, want)
+
+
+# -------------------------------------------------- ServeScheduler parity --
+
+# (arrival_step, prompt_seed, prompt_len, max_new): staggered arrivals into
+# max_slots=3 so requests join mid-run and evictions free slots mid-run
+TRACE = [(0, 0, 6, 4), (0, 1, 4, 5), (2, 2, 8, 3), (3, 3, 5, 4),
+         (5, 4, 7, 3), (6, 5, 3, 4)]
+
+
+def _run_sched(params, dispatch, depth, temperature=0.0):
+    sched = ServeScheduler(params, TINY, max_seq=MAX_SEQ, max_slots=3,
+                           dispatch=dispatch, temperature=temperature,
+                           sample_seed=11, pipeline_depth=depth,
+                           cache_dtype=jnp.float32)
+    rng = np.random.default_rng(42)
+    pending = sorted(
+        [(step, rng.integers(0, TINY.vocab_size, plen).astype(np.int32),
+          gen) for step, _, plen, gen in TRACE], key=lambda t: t[0])
+    while pending or sched.has_work():
+        while pending and pending[0][0] <= sched.step_idx:
+            _, prompt, gen = pending.pop(0)
+            sched.submit(prompt, gen)
+        sched.step()
+    return sched
+
+
+@pytest.mark.parametrize("dispatch", ["gather", "bcsr"])
+def test_scheduler_pipelined_token_parity(tiny_model, dispatch):
+    """Depth-1 continuous batching emits per-request token streams
+    identical to depth 0, across mid-run joins and evictions (the batch
+    composition changes while executes are in flight)."""
+    params, _ = tiny_model
+    a = _run_sched(params, dispatch, 0)
+    b = _run_sched(params, dispatch, 1)
+    want = {r.uid: list(r.tokens) for r in a.finished}
+    got = {r.uid: list(r.tokens) for r in b.finished}
+    assert len(want) == len(TRACE)
+    assert got == want
+
+
+def test_scheduler_pipelined_temperature_parity(tiny_model):
+    """Per-request key chains survive the on-device vmapped sampler: the
+    scheduler's depth-1 temperature tokens match depth 0 exactly."""
+    params, _ = tiny_model
+    a = _run_sched(params, "bcsr", 0, temperature=0.7)
+    b = _run_sched(params, "bcsr", 1, temperature=0.7)
+    assert ({r.uid: list(r.tokens) for r in b.finished}
+            == {r.uid: list(r.tokens) for r in a.finished})
+
+
+# --------------------------------------------------- overlap accounting --
+
+
+def test_serial_mode_has_zero_hidden_route(tiny_model):
+    """Depth 0 is the serial baseline by construction: no route time is
+    ever counted as hidden, and no execute is dispatch-only."""
+    params, prompts = tiny_model
+    loop = ServeLoop(params, TINY, max_seq=MAX_SEQ, dispatch="bcsr")
+    loop.run(prompts, GEN)
+    s = loop.summary()
+    assert s["pipeline"]["depth"] == 0
+    assert s["timing"]["route_hidden_frac"] == 0.0
+    assert s["timing"]["route_hidden_ms"] == 0.0
+    assert s["timing"]["execute_dispatch_ms"] == 0.0
+    for st in loop.stats:
+        if st.phase == "route":
+            assert st.extra["hidden_s"] == 0.0
+            assert not st.extra["pipelined"]
+        if st.phase == "execute":
+            assert not st.extra["dispatch_only"]
+    assert "drain" not in s
+
+
+def test_pipelined_overlap_accounting_bounds(tiny_model):
+    """Depth 1: hidden route time is a sub-interval of the route fetch
+    wait (hidden_s <= wait_s per stat, so route_hidden_frac is in [0, 1]),
+    and the blocked-execute column is empty for decode steps."""
+    params, prompts = tiny_model
+    loop = ServeLoop(params, TINY, max_seq=MAX_SEQ, dispatch="bcsr",
+                     pipeline_depth=1)
+    loop.run(prompts, GEN)
+    s = loop.summary()
+    tm = s["timing"]
+    assert 0.0 <= tm["route_hidden_frac"] <= 1.0
+    assert tm["route_hidden_ms"] <= tm["route_wait_ms"] + 1e-9
+    for st in loop.stats:
+        if st.phase == "route":
+            assert 0.0 <= st.extra["hidden_s"] <= (
+                st.extra.get("wait_s", 0.0) + 1e-9)
+            # depth 1 never blocks on the attention half before routing
+            assert st.extra["drain_s"] == 0.0
+
+
+# ------------------------------------------------- timing attribution --
+
+
+def test_serial_timing_attribution_sums_to_wall(tiny_model):
+    """Satellite 2: in serial mode the phase components -- attention drain,
+    host route, device execute, final logits wait -- are disjoint
+    sub-intervals of the layered prefill/decode walls, so their sum is
+    bounded by (and accounts for the bulk of) the pass wall-clock.
+    Aggregated over all steps; generous tolerance for interpret-mode CPU
+    timer noise."""
+    params, prompts = tiny_model
+    loop = ServeLoop(params, TINY, max_seq=MAX_SEQ, dispatch="bcsr")
+    loop.run(prompts, GEN)
+    loop.run(prompts, GEN)   # measure the warm run: stats reset per run
+    s = loop.summary()
+    wall = s["prefill"]["seconds"] + s["decode"]["seconds"]
+    tm = s["timing"]
+    logits_wait = sum(st.extra.get("logits_wait_s", 0.0)
+                      for st in loop.stats if st.phase == "decode")
+    parts = (tm["attn_drain_ms"] + tm["host_route_ms"]
+             + tm["route_wait_ms"] + tm["device_execute_ms"]) / 1e3 \
+        + logits_wait
+    # components nest inside the pass timers: the sum can only fall short
+    # of wall by the unattributed remainder (per-layer python glue + attn
+    # dispatch, which dominates at this tiny d_model -- hence the loose
+    # floor; the exact identities below are the sharp attribution check)
+    assert parts <= wall + 5e-3
+    assert parts >= 0.05 * wall
+    # the split is exact by construction: host + wait == route phase
+    route_s = s["route"]["seconds"]
+    assert (tm["host_route_ms"] + tm["route_wait_ms"]) / 1e3 == \
+        pytest.approx(route_s, rel=1e-9)
+    assert tm["device_execute_ms"] / 1e3 == \
+        pytest.approx(s["execute"]["seconds"], rel=1e-9)
