@@ -28,6 +28,27 @@ def _flatten(tree) -> Tuple[list, Any]:
     return leaves, treedef
 
 
+def _pack_leaf(arr: np.ndarray) -> Tuple[np.ndarray, Optional[str]]:
+    """``np.savez`` silently degrades extension dtypes (ml_dtypes bf16 /
+    fp8 -- numpy kind ``V``) to raw void records that load back as ``|V2``
+    garbage.  Byte-view those to uint8 and return the true dtype name so
+    :func:`_unpack_leaf` can view them back losslessly."""
+    if np.dtype(arr.dtype).kind != "V":
+        return arr, None
+    raw = np.frombuffer(
+        np.ascontiguousarray(arr).tobytes(), np.uint8).reshape(
+            arr.shape[:-1] + (-1,) if arr.ndim else (-1,))
+    return raw, np.dtype(arr.dtype).name
+
+
+def _unpack_leaf(raw: np.ndarray, dtype_name: Optional[str],
+                 shape) -> np.ndarray:
+    if dtype_name is None:
+        return raw
+    # ml_dtypes (imported via jax) registers the names with np.dtype
+    return raw.reshape(-1).view(np.dtype(dtype_name)).reshape(shape)
+
+
 class CheckpointManager:
     def __init__(self, directory: str | Path, keep: int = 3):
         self.dir = Path(directory)
@@ -45,12 +66,21 @@ class CheckpointManager:
         tmp.mkdir()
         leaves, treedef = _flatten(state)
         host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+        packed, dtypes, shapes = [], {}, {}
+        for i, l in enumerate(host_leaves):
+            raw, name = _pack_leaf(l)
+            packed.append(raw)
+            if name is not None:
+                dtypes[str(i)] = name
+                shapes[str(i)] = list(l.shape)
         np.savez(tmp / "leaves.npz",
-                 **{f"leaf_{i}": l for i, l in enumerate(host_leaves)})
+                 **{f"leaf_{i}": l for i, l in enumerate(packed)})
         (tmp / "meta.json").write_text(json.dumps({
             "step": step,
             "treedef": str(treedef),
             "n_leaves": len(host_leaves),
+            "leaf_dtypes": dtypes,     # only the byte-packed (kind-V) leaves
+            "leaf_shapes": shapes,
             "metadata": metadata or {},
         }))
         os.replace(tmp, final)                      # atomic on POSIX
@@ -95,7 +125,11 @@ class CheckpointManager:
         leaves, treedef = _flatten(like)
         assert meta["n_leaves"] == len(leaves), \
             f"checkpoint has {meta['n_leaves']} leaves, model has {len(leaves)}"
-        host = [blob[f"leaf_{i}"] for i in range(len(leaves))]
+        dtypes = meta.get("leaf_dtypes", {})
+        shapes = meta.get("leaf_shapes", {})
+        host = [_unpack_leaf(blob[f"leaf_{i}"], dtypes.get(str(i)),
+                             tuple(shapes.get(str(i), ())))
+                for i in range(len(leaves))]
         for h, l in zip(host, leaves):
             assert h.shape == l.shape, (h.shape, l.shape)
         if shardings is not None:

@@ -14,11 +14,13 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .precision import dequantize_blocks, is_narrow, quantize_blocks
 
 
 def _pytree_dataclass(cls=None, *, static: Tuple[str, ...] = ()):
@@ -77,6 +79,11 @@ class BCSR:
     ``block_rows[i]`` / ``block_cols[i]`` are its block coordinates. This is
     the index stream handed to the SpMM kernel's scalar prefetch: exactly the
     SU "index stream drives data stream" contract.
+
+    Narrow (fp8 / int8) block values carry per-block f32 ``scales`` alongside
+    the index stream (the BlockQuant scheme, ``core.precision``): block ``i``
+    dequantizes as ``blocks[i].astype(f32) * scales[i]``.  Wide values leave
+    ``scales`` as None -- that path is byte-identical to the pre-quant format.
     """
 
     indptr: jax.Array      # (n_brows + 1,) int32 -- offsets into the block stream
@@ -85,6 +92,10 @@ class BCSR:
     blocks: jax.Array      # (nnzb, bm, bn) float
     shape: Tuple[int, int]
     block: Tuple[int, int]
+    scales: Optional[jax.Array] = None  # (nnzb,) f32 per-block dequant scales
+
+    def __post_init__(self):
+        _check_quant_consistency("BCSR", self.blocks, self.scales, 1)
 
     @property
     def nnzb(self) -> int:
@@ -94,7 +105,23 @@ class BCSR:
     def grid_shape(self) -> Tuple[int, int]:
         return (self.shape[0] // self.block[0], self.shape[1] // self.block[1])
 
+    def quantize(self, dtype, *, rounding: str = "nearest",
+                 seed: int = 0) -> "BCSR":
+        """Per-block-scaled narrow copy (same index stream)."""
+        q, s = quantize_blocks(self.blocks, dtype, rounding=rounding, seed=seed)
+        return dataclasses.replace(self, blocks=q, scales=s)
+
+    def dequantize(self) -> "BCSR":
+        """f32 copy with scales folded back into the block values."""
+        if self.scales is None:
+            return self
+        return dataclasses.replace(
+            self, blocks=dequantize_blocks(self.blocks, self.scales),
+            scales=None)
+
     def todense(self) -> jax.Array:
+        if self.scales is not None:
+            return self.dequantize().todense()
         bm, bn = self.block
         gm, gn = self.grid_shape
         dense = jnp.zeros((gm, gn, bm, bn), self.blocks.dtype)
@@ -104,6 +131,34 @@ class BCSR:
     def density(self) -> float:
         gm, gn = self.grid_shape
         return self.nnzb / float(gm * gn)
+
+
+def _check_quant_consistency(cls_name: str, blocks, scales, lead_ndim: int):
+    """Construction-time value-dtype / scale-shape validation.
+
+    Narrow (1-byte) block values without scales would silently upcast into
+    garbage downstream (the kernels would treat raw quantized codes as
+    magnitudes); mis-shaped scales would broadcast wrongly.  Both raise here,
+    with shapes in the message.  hasattr-guarded so non-array placeholders
+    flowing through pytree unflatten (tree_map outputs, ShapeDtypeStructs
+    without dtype, etc.) pass through untouched.
+    """
+    if scales is not None and hasattr(blocks, "shape") and hasattr(scales, "shape"):
+        want = tuple(blocks.shape[:lead_ndim])
+        if tuple(scales.shape) != want:
+            raise ValueError(
+                f"{cls_name}: scales shape {tuple(scales.shape)} does not "
+                f"match blocks {tuple(blocks.shape)} (expected per-block "
+                f"scales of shape {want})")
+        if hasattr(scales, "dtype") and scales.dtype != jnp.float32:
+            raise ValueError(
+                f"{cls_name}: scales must be float32, got {scales.dtype}")
+    if scales is None and hasattr(blocks, "dtype") and is_narrow(blocks.dtype):
+        raise ValueError(
+            f"{cls_name}: narrow block values ({blocks.dtype}, shape "
+            f"{tuple(getattr(blocks, 'shape', ()))}) require per-block "
+            "scales; quantize via .quantize()/core.precision.quantize_blocks "
+            "instead of casting raw values")
 
 
 @_pytree_dataclass(static=("shape", "block"))
@@ -127,6 +182,10 @@ class BatchedBCSR:
     blocks: jax.Array      # (B, nnzb, bm, bn) float
     shape: Tuple[int, int, int]   # (B, M, K)
     block: Tuple[int, int]
+    scales: Optional[jax.Array] = None  # (B, nnzb) f32 per-block scales
+
+    def __post_init__(self):
+        _check_quant_consistency("BatchedBCSR", self.blocks, self.scales, 2)
 
     @property
     def batch(self) -> int:
@@ -144,7 +203,22 @@ class BatchedBCSR:
         """Static (python-int) batch element as a plain BCSR view."""
         return BCSR(indptr=self.indptr, block_rows=self.block_rows,
                     block_cols=self.block_cols, blocks=self.blocks[i],
-                    shape=self.shape[1:], block=self.block)
+                    shape=self.shape[1:], block=self.block,
+                    scales=None if self.scales is None else self.scales[i])
+
+    def quantize(self, dtype, *, rounding: str = "nearest",
+                 seed: int = 0) -> "BatchedBCSR":
+        """Per-block-scaled narrow copy (same shared index stream)."""
+        q, s = quantize_blocks(self.blocks, dtype, rounding=rounding, seed=seed)
+        return dataclasses.replace(self, blocks=q, scales=s)
+
+    def dequantize(self) -> "BatchedBCSR":
+        """f32 copy with scales folded back into the block values."""
+        if self.scales is None:
+            return self
+        return dataclasses.replace(
+            self, blocks=dequantize_blocks(self.blocks, self.scales),
+            scales=None)
 
     def with_capacity(self, nnzb_cap: int) -> "BatchedBCSR":
         """Pad the shared index stream to exactly ``nnzb_cap`` entries.
@@ -186,12 +260,21 @@ class BatchedBCSR:
             [self.blocks,
              jnp.zeros((self.batch, pad) + tuple(self.block),
                        self.blocks.dtype)], axis=1)
+        scales = self.scales
+        if scales is not None:
+            # Zero pad blocks dequantize to zero under any scale; 1.0 keeps
+            # the all-zero-block convention of quantize_blocks.
+            scales = jnp.concatenate(
+                [scales, jnp.ones((self.batch, pad), jnp.float32)], axis=1)
         return BatchedBCSR(indptr=jnp.asarray(indptr),
                            block_rows=jnp.asarray(rows),
                            block_cols=jnp.asarray(cols),
-                           blocks=blocks, shape=self.shape, block=self.block)
+                           blocks=blocks, shape=self.shape, block=self.block,
+                           scales=scales)
 
     def todense(self) -> jax.Array:
+        if self.scales is not None:
+            return self.dequantize().todense()
         bm, bn = self.block
         gm, gn = self.grid_shape
         dense = jnp.zeros((self.batch, gm, gn, bm, bn), self.blocks.dtype)

@@ -8,7 +8,7 @@ has no TPU datapath (recorded in DESIGN.md S7); f32 is the "wide" anchor.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -60,3 +60,221 @@ def widening_sum_dot(a: jax.Array, b: jax.Array, out_dtype=jnp.float32) -> jax.A
     the documented primitive the precision benchmarks exercise.
     """
     return jnp.sum(a.astype(out_dtype) * b.astype(out_dtype), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# BlockQuant: per-block-scaled narrow storage (the 8-bit end of the ladder).
+#
+# Occamy streams FP8/FP16 operands through *wide* accumulators (ExSdotp);
+# the repro's translation is symmetric per-block quantization: narrow values
+# (fp8 e4m3 / e5m2 / int8) plus one f32 scale per block, dequantized with a
+# single multiply right before the f32-resident accumulator.  The dequant
+# contract is ``values.astype(f32) * scale`` -- *exactly* that expression, in
+# that order -- so a kernel that applies the scale in VMEM is bit-identical
+# to dequantizing on host and running the f32 kernel.
+# ---------------------------------------------------------------------------
+
+QUANT_DTYPES: Dict[str, jnp.dtype] = {
+    "fp8_e4m3": jnp.float8_e4m3fn,
+    "fp8_e5m2": jnp.float8_e5m2,
+    "int8": jnp.int8,
+}
+
+# Largest representable magnitude per narrow format (symmetric: int8 uses
+# +/-127 so the scale grid has no asymmetric -128 corner).
+QUANT_MAX: Dict[str, float] = {
+    "fp8_e4m3": 448.0,
+    "fp8_e5m2": 57344.0,
+    "int8": 127.0,
+}
+
+# f32 mantissa bits dropped when truncating to each narrow float: the dither
+# width of the stochastic-rounding bit trick.
+_SR_DROP_BITS = {"fp8_e4m3": 23 - 3, "fp8_e5m2": 23 - 2}
+
+
+def quant_name(dtype) -> str | None:
+    """Reverse lookup: narrow storage dtype -> ladder name (None if wide)."""
+    d = jnp.dtype(dtype)
+    for name, q in QUANT_DTYPES.items():
+        if jnp.dtype(q) == d:
+            return name
+    return None
+
+
+def is_narrow(dtype) -> bool:
+    """True for 1-byte block-value dtypes (fp8 variants / int8)."""
+    return quant_name(dtype) is not None
+
+
+def _resolve_quant(dtype) -> Tuple[str, jnp.dtype, float]:
+    if isinstance(dtype, str):
+        name = dtype
+        if name not in QUANT_DTYPES:
+            raise ValueError(f"unknown quant dtype {name!r}; "
+                             f"choose from {sorted(QUANT_DTYPES)}")
+        return name, QUANT_DTYPES[name], QUANT_MAX[name]
+    name = quant_name(dtype)
+    if name is None:
+        raise ValueError(f"{jnp.dtype(dtype)} is not a narrow quant dtype; "
+                         f"choose from {sorted(QUANT_DTYPES)}")
+    return name, QUANT_DTYPES[name], QUANT_MAX[name]
+
+
+def _sr_key(seed: int, salt: int) -> jax.Array:
+    """Deterministic key derivation: an explicit integer seed folded with a
+    per-call-site salt.  No global or threaded key state -- the same
+    ``seed`` yields bit-identical rounding across calls and under jit."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), salt)
+
+
+def stochastic_round(x: jax.Array, dtype, *, seed: int = 0,
+                     salt: int = 0) -> jax.Array:
+    """Stochastically round ``x`` (f32) to a narrow dtype, deterministically.
+
+    Float targets use the mantissa-dither trick: add uniform random bits
+    below the target mantissa to the magnitude bit pattern, then truncate --
+    each value rounds up with probability equal to its fractional distance.
+    int8 targets add uniform [0, 1) and floor.  The key is derived from
+    ``(seed, salt)`` only, so identical inputs + seed give identical bits on
+    every call, eager or jitted.
+    """
+    name, qdtype, qmax = _resolve_quant(dtype)
+    x = jnp.clip(x.astype(jnp.float32), -qmax, qmax)
+    key = _sr_key(seed, salt)
+    if name == "int8":
+        u = jax.random.uniform(key, x.shape, jnp.float32)
+        return jnp.clip(jnp.floor(x + u), -127, 127).astype(jnp.int8)
+    drop = _SR_DROP_BITS[name]
+    sign = jnp.signbit(x)
+    bits = jnp.abs(x).view(jnp.uint32)
+    dither = jax.random.bits(key, x.shape, jnp.uint32) % jnp.uint32(1 << drop)
+    bits = bits + dither
+    bits = bits & jnp.uint32(~((1 << drop) - 1) & 0xFFFFFFFF)
+    mag = bits.view(jnp.float32)
+    y = jnp.where(sign, -mag, mag)
+    # Truncated magnitudes are exactly representable (modulo the clip at
+    # qmax, which the re-clip below restores), so astype cannot re-round.
+    return jnp.clip(y, -qmax, qmax).astype(qdtype)
+
+
+def _round_to(x: jax.Array, dtype, rounding: str, seed: int) -> jax.Array:
+    """Round pre-scaled f32 values into the narrow grid."""
+    name, qdtype, qmax = _resolve_quant(dtype)
+    if rounding == "stochastic":
+        return stochastic_round(x, name, seed=seed)
+    if rounding != "nearest":
+        raise ValueError(f"rounding must be 'nearest' or 'stochastic', "
+                         f"got {rounding!r}")
+    x = jnp.clip(x.astype(jnp.float32), -qmax, qmax)
+    if name == "int8":
+        return jnp.clip(jnp.round(x), -127, 127).astype(jnp.int8)
+    return x.astype(qdtype)  # native round-to-nearest-even
+
+
+def _amax_scale(x: jax.Array, axes, qmax: float) -> jax.Array:
+    amax = jnp.max(jnp.abs(x), axis=axes)
+    return jnp.where(amax > 0, amax / qmax, 1.0).astype(jnp.float32)
+
+
+def quantize_blocks(blocks: jax.Array, dtype, *, rounding: str = "nearest",
+                    seed: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Per-block symmetric quantization of a ``(..., nnzb, bm, bn)`` stream.
+
+    One f32 scale per (bm, bn) block: ``scale = max|block| / qmax`` (1.0 for
+    all-zero blocks so dequant is exact and divisions are safe).  Returns
+    ``(values, scales)`` with ``values.shape == blocks.shape`` and
+    ``scales.shape == blocks.shape[:-2]``.
+    """
+    x = blocks.astype(jnp.float32)
+    _, _, qmax = _resolve_quant(dtype)
+    scales = _amax_scale(x, (-2, -1), qmax)
+    q = _round_to(x / scales[..., None, None], dtype, rounding, seed)
+    return q, scales
+
+
+def dequantize_blocks(values: jax.Array, scales: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_blocks`: ``values.astype(f32) * scale``.
+
+    This expression *is* the bit-identity contract -- the quantized kernels
+    compute it verbatim per stream block before the f32 accumulator.
+    """
+    return values.astype(jnp.float32) * scales[..., None, None].astype(jnp.float32)
+
+
+def quantize_rows(vals: jax.Array, dtype, *, rounding: str = "nearest",
+                  seed: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Per-row quantization over the *last* axis: ELL row streams
+    ``(R, la)`` and KV time-slices ``(..., t, head_dim)`` both scale over
+    their trailing axis.  Returns ``(values, scales)`` with
+    ``scales.shape == vals.shape[:-1]``."""
+    x = vals.astype(jnp.float32)
+    _, _, qmax = _resolve_quant(dtype)
+    scales = _amax_scale(x, -1, qmax)
+    q = _round_to(x / scales[..., None], dtype, rounding, seed)
+    return q, scales
+
+
+def dequantize_rows(values: jax.Array, scales: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_rows` (same op-order contract)."""
+    return (values.astype(jnp.float32)
+            * scales[..., None].astype(jnp.float32)).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantTensor:
+    """A dense tensor stored as narrow values + f32 scales over ``axis``.
+
+    Registered as a pytree (``axis`` static) so it passes through jit /
+    device_put / checkpoint flattening as two leaves.  ``shape``/``dtype``
+    mirror the values array so shape-probing callers need no special case.
+    """
+
+    values: jax.Array   # narrow storage (fp8 / int8)
+    scales: jax.Array   # f32, values.shape with ``axis`` removed
+    axis: int           # reduction axis the scales were computed over
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    @property
+    def ndim(self):
+        return self.values.ndim
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        s = jnp.expand_dims(self.scales, self.axis)
+        return (self.values.astype(jnp.float32)
+                * s.astype(jnp.float32)).astype(dtype)
+
+
+jax.tree_util.register_pytree_node(
+    QuantTensor,
+    lambda t: ((t.values, t.scales), t.axis),
+    lambda axis, kids: QuantTensor(values=kids[0], scales=kids[1], axis=axis),
+)
+
+
+def quantize_tensor(x: jax.Array, dtype, *, axis: int = -1,
+                    rounding: str = "nearest", seed: int = 0) -> QuantTensor:
+    """Quantize a dense tensor with one scale per slice along ``axis``
+    (the reduction axis of the consuming contraction, so scale error stays
+    per-output-channel).  Returns a :class:`QuantTensor` pytree.
+
+    A *negative* ``axis`` is stored as-is, which makes the QuantTensor
+    slice-stable: stripping leading (stacking/batch) dims via ``lax.scan``
+    or per-leaf indexing keeps the stored axis pointing at the same
+    trailing dimension."""
+    if not -x.ndim <= axis < x.ndim:
+        raise ValueError(f"quantize_tensor: axis {axis} out of range for "
+                         f"ndim {x.ndim}")
+    xf = x.astype(jnp.float32)
+    _, _, qmax = _resolve_quant(dtype)
+    scales = _amax_scale(xf, axis, qmax)
+    q = _round_to(xf / jnp.expand_dims(scales, axis), dtype, rounding, seed)
+    return QuantTensor(values=q, scales=scales, axis=axis)

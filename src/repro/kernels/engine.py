@@ -242,9 +242,20 @@ def _pad_dim(x: jax.Array, dim: int, multiple: int, value=0) -> jax.Array:
 
 @functools.lru_cache(maxsize=None)
 def _sharded_spmm_fn(mesh: Mesh, axis: str, gm: int, bn: int, nt: int,
-                     out_dtype: str, interpret: bool):
+                     out_dtype: str, interpret: bool, quant: bool = False):
     kern = functools.partial(spmm_bcsr, n_block_rows=gm, bn=bn, nt=nt,
                              out_dtype=jnp.dtype(out_dtype), interpret=interpret)
+    if quant:
+        # BlockQuant stream: per-block scales replicated alongside the index
+        # stream (every device dequantizes the same narrow blocks).
+        return jax.jit(compat_shard_map(
+            lambda rows, cols, blocks, scales, dense: kern(
+                rows, cols, blocks, dense, scales=scales),
+            mesh=mesh,
+            in_specs=(P(), P(), P(), P(), P(None, axis)),
+            out_specs=P(None, axis),
+            check=False,
+        ))
     return jax.jit(compat_shard_map(
         lambda rows, cols, blocks, dense: kern(rows, cols, blocks, dense),
         mesh=mesh,
@@ -272,13 +283,17 @@ def shard_spmm(a: BCSR, dense: jax.Array, *, mesh: Optional[Mesh] = None,
     K, N = dense.shape
     assert K == a.shape[1], (a.shape, dense.shape)
     n_local = max(1, N // n_dev)
-    bn = spmm_ops._resolve_bn(bn, n_local, dense.dtype, a.block[1])
-    nt = spmm_ops._resolve_nt(nt, bn, n_local, dense.dtype, a.block[1])
+    tile_dtype = a.blocks.dtype if a.scales is not None else dense.dtype
+    bn = spmm_ops._resolve_bn(bn, n_local, tile_dtype, a.block[1])
+    nt = spmm_ops._resolve_nt(nt, bn, n_local, tile_dtype, a.block[1])
     dense = _pad_dim(dense, 1, n_dev * nt * bn)
     gm, _ = a.grid_shape
     fn = _sharded_spmm_fn(mesh, axis, gm, bn, nt, jnp.dtype(out_dtype).name,
-                          interpret)
-    out = fn(a.block_rows, a.block_cols, a.blocks, dense)
+                          interpret, quant=a.scales is not None)
+    if a.scales is not None:
+        out = fn(a.block_rows, a.block_cols, a.blocks, a.scales, dense)
+    else:
+        out = fn(a.block_rows, a.block_cols, a.blocks, dense)
     return out[:, :N]
 
 
@@ -288,9 +303,23 @@ def shard_spmm(a: BCSR, dense: jax.Array, *, mesh: Optional[Mesh] = None,
 
 @functools.lru_cache(maxsize=None)
 def _sharded_spmm_batched_fn(mesh: Mesh, axis: str, gm: int, bn: int, nt: int,
-                             out_dtype: str, interpret: bool):
+                             out_dtype: str, interpret: bool,
+                             quant: bool = False):
     kern = functools.partial(spmm_bcsr, n_block_rows=gm, bn=bn, nt=nt,
                              out_dtype=jnp.dtype(out_dtype), interpret=interpret)
+
+    if quant:
+        def local_q(rows, cols, blocks, scales, dense):
+            # per-batch scales ride the batch partition with their blocks
+            return jax.vmap(lambda bl, s, d: kern(rows, cols, bl, d, scales=s)
+                            )(blocks, scales, dense)
+
+        return jax.jit(compat_shard_map(
+            local_q, mesh=mesh,
+            in_specs=(P(), P(), P(axis), P(axis), P(axis)),
+            out_specs=P(axis),
+            check=False,
+        ))
 
     def local(rows, cols, blocks, dense):
         # vmap over this device's slice of the batch; index stream shared.
@@ -330,15 +359,22 @@ def shard_spmm_batched_stream(a: BatchedBCSR, dense: jax.Array, *,
     assert dense.shape[0] == B and dense.shape[1] == a.shape[2], (
         a.shape, dense.shape)
     N = dense.shape[2]
-    bn = spmm_ops._resolve_bn(bn, N, dense.dtype, a.block[1])
-    nt = spmm_ops._resolve_nt(nt, bn, N, dense.dtype, a.block[1])
+    tile_dtype = a.blocks.dtype if a.scales is not None else dense.dtype
+    bn = spmm_ops._resolve_bn(bn, N, tile_dtype, a.block[1])
+    nt = spmm_ops._resolve_nt(nt, bn, N, tile_dtype, a.block[1])
     dense = _pad_dim(_pad_dim(dense, 2, nt * bn), 0, n_dev)
     blocks = _pad_dim(a.blocks, 0, n_dev)
     gm, _ = a.grid_shape
     fn = _sharded_spmm_batched_fn(mesh, axis, gm, bn, nt,
-                                  jnp.dtype(out_dtype).name, interpret)
-    out = fn(jnp.asarray(a.block_rows), jnp.asarray(a.block_cols), blocks,
-             dense)
+                                  jnp.dtype(out_dtype).name, interpret,
+                                  quant=a.scales is not None)
+    if a.scales is not None:
+        scales = _pad_dim(a.scales, 0, n_dev, value=1.0)
+        out = fn(jnp.asarray(a.block_rows), jnp.asarray(a.block_cols), blocks,
+                 scales, dense)
+    else:
+        out = fn(jnp.asarray(a.block_rows), jnp.asarray(a.block_cols), blocks,
+                 dense)
     return out[:B, :, :N]
 
 
@@ -382,9 +418,18 @@ def shard_spmm_batched_bucketed(a: BatchedBCSR, dense: jax.Array, *,
 
 @functools.lru_cache(maxsize=None)
 def _sharded_spmspm_fn(mesh: Mesh, axis: str, rt: int, ct: int, nt: int,
-                       out_dtype: str, interpret: bool):
+                       out_dtype: str, interpret: bool, quant: bool = False):
     kern = functools.partial(spmspm_ell, rt=rt, ct=ct, nt=nt,
                              out_dtype=jnp.dtype(out_dtype), interpret=interpret)
+    if quant:
+        # Per-row scales are replicated with A's row streams.
+        return jax.jit(compat_shard_map(
+            lambda ak, av, asc, bk, bv: kern(ak, av, bk, bv, a_scales=asc),
+            mesh=mesh,
+            in_specs=(P(), P(), P(), P(axis, None), P(axis, None)),
+            out_specs=P(None, axis),
+            check=False,
+        ))
     return jax.jit(compat_shard_map(
         lambda ak, av, bk, bv: kern(ak, av, bk, bv),
         mesh=mesh,
@@ -398,12 +443,14 @@ def shard_spmspm(a_keys, a_vals, b_keys, b_vals, *,
                  mesh: Optional[Mesh] = None, rt: Optional[int] = None,
                  ct: Optional[int] = None, nt: Optional[int] = None,
                  out_dtype=jnp.float32,
-                 interpret: Optional[bool] = None) -> jax.Array:
+                 interpret: Optional[bool] = None,
+                 a_scales: Optional[jax.Array] = None) -> jax.Array:
     """Sharded sorted-stream intersection: A's row streams replicated, B's
     column streams partitioned; device d computes output columns of its B
     stripe.  R is padded to ``rt`` and C to ``n_dev * nt * ct`` (INVALID
     keys, zero values -- they can never match) and both pads are stripped.
-    ``nt`` is the per-device output-column residency width."""
+    ``nt`` is the per-device output-column residency width.  ``a_scales``
+    ((R,) f32) carries BlockQuant per-row scales for narrow ``a_vals``."""
     mesh, axis = auto_mesh(mesh)
     n_dev = mesh.shape[axis]
     interpret = _interpret_default(interpret)
@@ -424,5 +471,9 @@ def shard_spmspm(a_keys, a_vals, b_keys, b_vals, *,
     bk = _pad_dim(bk, 0, n_dev * nt * ct, value=INVALID_KEY)
     bv = _pad_dim(bv, 0, n_dev * nt * ct)
     fn = _sharded_spmspm_fn(mesh, axis, rt, ct, nt, jnp.dtype(out_dtype).name,
-                            interpret)
+                            interpret, quant=a_scales is not None)
+    if a_scales is not None:
+        asc = jnp.asarray(a_scales, jnp.float32).reshape(R, 1)
+        asc = _pad_dim(asc, 0, rt, value=1.0)
+        return fn(ak, av, asc, bk, bv)[:R, :C]
     return fn(ak, av, bk, bv)[:R, :C]

@@ -35,7 +35,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _spmm_kernel(brows_ref, bcols_ref, blocks_ref, b_ref, o_ref, *,
-                 bn: int, nt: int):
+                 bn: int, nt: int, scales_ref=None):
     i = pl.program_id(1)  # position in the nonzero-block stream
     t = pl.program_id(2)  # which resident N-subtile this step accumulates
     row = brows_ref[i]
@@ -46,6 +46,12 @@ def _spmm_kernel(brows_ref, bcols_ref, blocks_ref, b_ref, o_ref, *,
         o_ref[...] = jnp.zeros_like(o_ref)
 
     a = blocks_ref[0]          # (bm, bk)
+    if scales_ref is not None:
+        # BlockQuant dequant: one scale multiply per stream block, computed
+        # as ``values.astype(f32) * scale`` -- verbatim the host dequantize
+        # contract, so the narrow path is bit-identical to dequantizing on
+        # host and running the f32 kernel.
+        a = a.astype(jnp.float32) * scales_ref[0, 0]
     b = b_ref[...]             # (bk, bn)
     acc = jnp.dot(a, b, preferred_element_type=jnp.float32).astype(o_ref.dtype)
     if nt == 1:
@@ -59,10 +65,17 @@ def _spmm_kernel(brows_ref, bcols_ref, blocks_ref, b_ref, o_ref, *,
                 o_ref[:, tt * bn:(tt + 1) * bn] += acc
 
 
+def _spmm_quant_kernel(brows_ref, bcols_ref, blocks_ref, scales_ref, b_ref,
+                       o_ref, *, bn: int, nt: int):
+    _spmm_kernel(brows_ref, bcols_ref, blocks_ref, b_ref, o_ref,
+                 bn=bn, nt=nt, scales_ref=scales_ref)
+
+
 def spmm_bcsr(block_rows: jax.Array, block_cols: jax.Array, blocks: jax.Array,
               dense: jax.Array, *, n_block_rows: int, bn: int = 128,
               nt: int = 1, out_dtype=jnp.float32,
-              interpret: bool = False) -> jax.Array:
+              interpret: bool = False,
+              scales: jax.Array | None = None) -> jax.Array:
     """C = A @ dense where A is streamed as flattened BCSR blocks.
 
     Args:
@@ -73,6 +86,9 @@ def spmm_bcsr(block_rows: jax.Array, block_cols: jax.Array, blocks: jax.Array,
       n_block_rows: number of block rows of A (static).
       nt: output-residency width -- how many (bm, bn) N-tiles of the output
         row stay VMEM-resident per stream walk (1 = the classic kernel).
+      scales: (nnzb,) or (nnzb, 1) f32 per-block dequant scales for narrow
+        (fp8/int8) ``blocks`` (BlockQuant); None keeps the wide path
+        byte-identical to the pre-quant kernel.
     Returns:
       (n_block_rows * bm, N) in ``out_dtype``.
     """
@@ -85,30 +101,40 @@ def spmm_bcsr(block_rows: jax.Array, block_cols: jax.Array, blocks: jax.Array,
     # map is constant in t so each stream block is DMA'd once per i.
     grid = (N // (nt * bn), nnzb, nt)
 
-    kern = functools.partial(_spmm_kernel, bn=bn, nt=nt)
+    in_specs = [
+        # A-block stream: affine walk of the flattened block array;
+        # constant across t -> one fetch per stream position.
+        pl.BlockSpec((1, bm, bk),
+                     lambda j, i, t, rows, cols: (i, 0, 0)),
+        # Dense operand: the *indirect* stream -- block-col index
+        # steers which K-tile the DMA fetches (SU indirection); the
+        # pipeline double-buffers the next (bk, bn) tile while the
+        # MXU consumes the current one.
+        pl.BlockSpec((bk, bn),
+                     lambda j, i, t, rows, cols: (cols[i], j * nt + t)),
+    ]
+    operands = [block_rows, block_cols, blocks, dense]
+    if scales is None:
+        kern = functools.partial(_spmm_kernel, bn=bn, nt=nt)
+    else:
+        # Scale stream rides the same affine walk as the A blocks (one
+        # (1, 1) scalar per stream position, constant across t).
+        kern = functools.partial(_spmm_quant_kernel, bn=bn, nt=nt)
+        in_specs.insert(1, pl.BlockSpec((1, 1),
+                                        lambda j, i, t, rows, cols: (i, 0)))
+        operands.insert(3, scales.reshape(nnzb, 1).astype(jnp.float32))
     return pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,  # block_rows, block_cols
             grid=grid,
-            in_specs=[
-                # A-block stream: affine walk of the flattened block array;
-                # constant across t -> one fetch per stream position.
-                pl.BlockSpec((1, bm, bk),
-                             lambda j, i, t, rows, cols: (i, 0, 0)),
-                # Dense operand: the *indirect* stream -- block-col index
-                # steers which K-tile the DMA fetches (SU indirection); the
-                # pipeline double-buffers the next (bk, bn) tile while the
-                # MXU consumes the current one.
-                pl.BlockSpec((bk, bn),
-                             lambda j, i, t, rows, cols: (cols[i], j * nt + t)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec(
                 (bm, nt * bn), lambda j, i, t, rows, cols: (rows[i], j)),
         ),
         out_shape=jax.ShapeDtypeStruct((n_block_rows * bm, N), out_dtype),
         interpret=interpret,
-    )(block_rows, block_cols, blocks, dense)
+    )(*operands)
 
 
 def stream_walks(n: int, bn: int, nt: int) -> int:

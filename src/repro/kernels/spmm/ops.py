@@ -50,10 +50,20 @@ def pad_empty_rows(a: BCSR | BatchedBCSR):
     order = np.lexsort((cols, rows))
     indptr = np.zeros(gm + 1, np.int32)
     np.cumsum(np.bincount(rows, minlength=gm), out=indptr[1:])
+    scales = None
+    if a.scales is not None:
+        # The scale stream rides the block stream: pad with 1.0 (zero
+        # blocks dequantize to zero under any scale) and apply the same
+        # (row, col) re-sort.
+        s = np.asarray(a.scales, np.float32)
+        pad1 = np.ones(((missing.size,) if isinstance(a, BCSR)
+                        else (s.shape[0], missing.size)), np.float32)
+        s = np.concatenate([s, pad1], axis=-1)
+        scales = jnp.asarray(s[..., order])
     kw = dict(indptr=jnp.asarray(indptr),
               block_rows=jnp.asarray(rows[order]),
               block_cols=jnp.asarray(cols[order]),
-              shape=a.shape, block=a.block)
+              shape=a.shape, block=a.block, scales=scales)
     if isinstance(a, BCSR):
         return BCSR(blocks=jnp.asarray(blocks[order]), **kw)
     return BatchedBCSR(blocks=jnp.asarray(blocks[:, order]), **kw)
@@ -61,20 +71,24 @@ def pad_empty_rows(a: BCSR | BatchedBCSR):
 
 @functools.partial(jax.jit, static_argnames=("n_block_rows", "bn", "nt",
                                              "out_dtype", "interpret"))
-def _spmm_jit(block_rows, block_cols, blocks, dense, *, n_block_rows, bn, nt,
-              out_dtype, interpret):
+def _spmm_jit(block_rows, block_cols, blocks, dense, scales=None, *,
+              n_block_rows, bn, nt, out_dtype, interpret):
     return spmm_bcsr(block_rows, block_cols, blocks, dense,
                      n_block_rows=n_block_rows, bn=bn, nt=nt,
-                     out_dtype=out_dtype, interpret=interpret)
+                     out_dtype=out_dtype, interpret=interpret, scales=scales)
 
 
 @functools.partial(jax.jit, static_argnames=("n_block_rows", "bn", "nt",
                                              "out_dtype", "interpret"))
-def _spmm_batched_jit(block_rows, block_cols, blocks, dense, *, n_block_rows,
-                      bn, nt, out_dtype, interpret):
+def _spmm_batched_jit(block_rows, block_cols, blocks, dense, scales=None, *,
+                      n_block_rows, bn, nt, out_dtype, interpret):
     f = functools.partial(spmm_bcsr, n_block_rows=n_block_rows, bn=bn, nt=nt,
                           out_dtype=out_dtype, interpret=interpret)
-    return jax.vmap(lambda bl, d: f(block_rows, block_cols, bl, d))(blocks, dense)
+    if scales is None:
+        return jax.vmap(lambda bl, d: f(block_rows, block_cols, bl, d)
+                        )(blocks, dense)
+    return jax.vmap(lambda bl, s, d: f(block_rows, block_cols, bl, d, scales=s)
+                    )(blocks, scales, dense)
 
 
 def _resolve_bn(bn, n, dtype, bk) -> int:
@@ -123,13 +137,16 @@ def spmm(a: BCSR, dense: jax.Array, *, bn: int | None = None,
     a = pad_empty_rows(a)
     K, N = dense.shape
     assert K == a.shape[1], (a.shape, dense.shape)
-    bn = _resolve_bn(bn, N, dense.dtype, a.block[1])
-    nt = _resolve_nt(nt, bn, N, dense.dtype, a.block[1])
+    # Quantized streams key the tile table on the *narrow* block dtype
+    # (1-byte bucket rows: wider tiles for the same VMEM footprint).
+    tile_dtype = a.blocks.dtype if a.scales is not None else dense.dtype
+    bn = _resolve_bn(bn, N, tile_dtype, a.block[1])
+    nt = _resolve_nt(nt, bn, N, tile_dtype, a.block[1])
     n_pad = (-N) % (nt * bn)
     if n_pad:
         dense = jnp.pad(dense, ((0, 0), (0, n_pad)))
     gm, _ = a.grid_shape
-    out = _spmm_jit(a.block_rows, a.block_cols, a.blocks, dense,
+    out = _spmm_jit(a.block_rows, a.block_cols, a.blocks, dense, a.scales,
                     n_block_rows=gm, bn=bn, nt=nt, out_dtype=out_dtype,
                     interpret=interpret)
     return out[:, :N] if n_pad else out
@@ -150,15 +167,16 @@ def spmm_batched(a: BatchedBCSR, dense: jax.Array, *, bn: int | None = None,
     assert dense.shape[0] == B and dense.shape[1] == a.shape[2], (
         a.shape, dense.shape)
     N = dense.shape[2]
-    bn = _resolve_bn(bn, N, dense.dtype, a.block[1])
-    nt = _resolve_nt(nt, bn, N, dense.dtype, a.block[1])
+    tile_dtype = a.blocks.dtype if a.scales is not None else dense.dtype
+    bn = _resolve_bn(bn, N, tile_dtype, a.block[1])
+    nt = _resolve_nt(nt, bn, N, tile_dtype, a.block[1])
     n_pad = (-N) % (nt * bn)
     if n_pad:
         dense = jnp.pad(dense, ((0, 0), (0, 0), (0, n_pad)))
     gm, _ = a.grid_shape
     out = _spmm_batched_jit(a.block_rows, a.block_cols, a.blocks, dense,
-                            n_block_rows=gm, bn=bn, nt=nt, out_dtype=out_dtype,
-                            interpret=interpret)
+                            a.scales, n_block_rows=gm, bn=bn, nt=nt,
+                            out_dtype=out_dtype, interpret=interpret)
     return out[..., :N] if n_pad else out
 
 

@@ -23,9 +23,16 @@ from jax.experimental import pallas as pl
 from repro.core.formats import INVALID_KEY
 
 
-def _spmspm_kernel(ak_ref, av_ref, bk_ref, bv_ref, o_ref, *, rt, ct, la, lb):
+def _spmspm_kernel(ak_ref, av_ref, bk_ref, bv_ref, o_ref, *, rt, ct, la, lb,
+                   as_ref=None):
     ak = ak_ref[...]                      # (rt, la) int32 sorted keys
     av = av_ref[...].astype(jnp.float32)  # (rt, la)
+    if as_ref is not None:
+        # BlockQuant dequant of the narrow A row stream: one f32 scale per
+        # row, ``values.astype(f32) * scale`` -- verbatim the host
+        # dequantize_rows contract, so narrow A values are bit-identical to
+        # dequantizing on host and running the f32 kernel.
+        av = av * as_ref[...]             # (rt, la) * (rt, 1)
     bk = bk_ref[...]                      # (ct, lb)
     bv = bv_ref[...].astype(jnp.float32)  # (ct, lb)
 
@@ -42,14 +49,24 @@ def _spmspm_kernel(ak_ref, av_ref, bk_ref, bv_ref, o_ref, *, rt, ct, la, lb):
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
+def _spmspm_quant_kernel(ak_ref, av_ref, as_ref, bk_ref, bv_ref, o_ref, *,
+                         rt, ct, la, lb):
+    _spmspm_kernel(ak_ref, av_ref, bk_ref, bv_ref, o_ref,
+                   rt=rt, ct=ct, la=la, lb=lb, as_ref=as_ref)
+
+
 def spmspm_ell(a_keys: jax.Array, a_vals: jax.Array,
                b_keys: jax.Array, b_vals: jax.Array, *,
                rt: int = 8, ct: int = 8, nt: int = 1, out_dtype=jnp.float32,
-               interpret: bool = False) -> jax.Array:
+               interpret: bool = False,
+               a_scales: jax.Array | None = None) -> jax.Array:
     """C[r, c] = sum over key matches of A-row r and B-col c.
 
     a_keys/a_vals: (R, La) padded-ELL rows of A (keys ascending, INVALID pad).
     b_keys/b_vals: (C, Lb) padded-ELL *columns* of B.
+    a_scales: (R,) or (R, 1) f32 per-row dequant scales for narrow (fp8/int8)
+    ``a_vals`` (BlockQuant over the row stream); None keeps the wide path
+    byte-identical to the pre-quant kernel.
     ``nt``: output-column residency -- one grid step holds an (rt, nt*ct)
     output tile resident and intersects against an (nt*ct, lb) B-stream
     block, so the A row stream (the serial ``la`` walk) runs once per ``nt``
@@ -64,17 +81,25 @@ def spmspm_ell(a_keys: jax.Array, a_vals: jax.Array,
     assert nt >= 1, nt
     wct = nt * ct
     assert R % rt == 0 and C % wct == 0, ((R, C), (rt, ct, nt))
-    kern = functools.partial(_spmspm_kernel, rt=rt, ct=wct, la=la, lb=lb)
+    in_specs = [
+        pl.BlockSpec((rt, la), lambda i, j: (i, 0)),
+        pl.BlockSpec((rt, la), lambda i, j: (i, 0)),
+        pl.BlockSpec((wct, lb), lambda i, j: (j, 0)),
+        pl.BlockSpec((wct, lb), lambda i, j: (j, 0)),
+    ]
+    operands = [a_keys, a_vals, b_keys, b_vals]
+    if a_scales is None:
+        kern = functools.partial(_spmspm_kernel, rt=rt, ct=wct, la=la, lb=lb)
+    else:
+        kern = functools.partial(_spmspm_quant_kernel, rt=rt, ct=wct,
+                                 la=la, lb=lb)
+        in_specs.insert(2, pl.BlockSpec((rt, 1), lambda i, j: (i, 0)))
+        operands.insert(2, a_scales.reshape(R, 1).astype(jnp.float32))
     return pl.pallas_call(
         kern,
         grid=(R // rt, C // wct),
-        in_specs=[
-            pl.BlockSpec((rt, la), lambda i, j: (i, 0)),
-            pl.BlockSpec((rt, la), lambda i, j: (i, 0)),
-            pl.BlockSpec((wct, lb), lambda i, j: (j, 0)),
-            pl.BlockSpec((wct, lb), lambda i, j: (j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((rt, wct), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((R, C), out_dtype),
         interpret=interpret,
-    )(a_keys, a_vals, b_keys, b_vals)
+    )(*operands)

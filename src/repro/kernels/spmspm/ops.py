@@ -36,19 +36,22 @@ def dense_to_ell_cols(dense: np.ndarray, width: int | None = None):
 
 
 @functools.partial(jax.jit, static_argnames=("rt", "ct", "nt", "interpret"))
-def _spmspm_jit(ak, av, bk, bv, *, rt, ct, nt, interpret):
+def _spmspm_jit(ak, av, bk, bv, a_scales=None, *, rt, ct, nt, interpret):
     return spmspm_ell(ak, av, bk, bv, rt=rt, ct=ct, nt=nt,
-                      interpret=interpret)
+                      interpret=interpret, a_scales=a_scales)
 
 
 def spmspm(a_keys, a_vals, b_keys, b_vals, *, rt: int | None = None,
            ct: int | None = None, nt: int | None = None,
-           interpret: bool = False) -> jax.Array:
+           interpret: bool = False,
+           a_scales: jax.Array | None = None) -> jax.Array:
     """Dense-result SpMSpM over padded-ELL streams; pads R/C to tiles.
 
     ``rt``/``ct``/``nt`` default to the autotune table
     (repro.kernels.tuning); ``nt`` is the output-column residency width (the
-    A row stream is walked once per ``nt`` column tiles)."""
+    A row stream is walked once per ``nt`` column tiles).  ``a_scales``
+    carries per-row BlockQuant scales when ``a_vals`` is narrow (fp8/int8)
+    -- the narrow dtype keys the 1-byte tile-table rows via ``av.dtype``."""
     ak, av = jnp.asarray(a_keys), jnp.asarray(a_vals)
     bk, bv = jnp.asarray(b_keys), jnp.asarray(b_vals)
     R, C = ak.shape[0], bk.shape[0]
@@ -62,13 +65,20 @@ def spmspm(a_keys, a_vals, b_keys, b_vals, *, rt: int | None = None,
         raise ValueError(f"nt={nt} must be >= 1")
     nt = int(nt)
     rp, cp = (-R) % rt, (-C) % (nt * ct)
+    if a_scales is not None:
+        a_scales = jnp.asarray(a_scales, jnp.float32).reshape(R, 1)
     if rp:
         ak = jnp.pad(ak, ((0, rp), (0, 0)), constant_values=INVALID_KEY)
         av = jnp.pad(av, ((0, rp), (0, 0)))
+        if a_scales is not None:
+            # Pad rows are INVALID-keyed (contribute nothing); scale 1.0
+            # keeps the all-zero-row convention of quantize_rows.
+            a_scales = jnp.pad(a_scales, ((0, rp), (0, 0)),
+                               constant_values=1.0)
     if cp:
         bk = jnp.pad(bk, ((0, cp), (0, 0)), constant_values=INVALID_KEY)
         bv = jnp.pad(bv, ((0, cp), (0, 0)))
-    out = _spmspm_jit(ak, av, bk, bv, rt=rt, ct=ct, nt=nt,
+    out = _spmspm_jit(ak, av, bk, bv, a_scales, rt=rt, ct=ct, nt=nt,
                       interpret=interpret)
     return out[:R, :C]
 

@@ -147,8 +147,16 @@ class _ServeBase:
 
     def __init__(self, params, cfg, *, dispatch: Optional[str] = None,
                  two_phase: Optional[bool] = None, temperature: float = 0.0,
-                 sample_seed: int = 3, pipeline_depth: int = 0):
+                 sample_seed: int = 3, pipeline_depth: int = 0,
+                 quantize_experts: Optional[str] = None,
+                 kv_quant: Optional[str] = None):
         self.params, self.cfg = params, cfg
+        self.quantize_experts = quantize_experts
+        self.kv_quant = kv_quant
+        if quantize_experts:
+            # opt-in narrow expert FFN weights: one-time host quantization,
+            # QuantTensor leaves then flow through every execute path
+            self.params = moe.quantize_model_experts(params, quantize_experts)
         self.backend = dispatch or cfg.moe_dispatch
         has_moe = any(k == "attn+moe" for k in cfg.block_unit)
         self.two_phase = ((self.backend == "bcsr" and has_moe)
@@ -317,16 +325,27 @@ class ServeLoop(_ServeBase):
         behavior bit-for-bit); 1 = pipelined hot path (route-ahead fused
         programs, executes in flight behind host routing, on-device
         sampling -- token-identical to depth 0, see module docstring).
+    quantize_experts : narrow dtype name ("fp8_e4m3" | "fp8_e5m2" | "int8")
+        to BlockQuant the expert FFN weights at construction
+        (``moe.quantize_model_experts``); None (default) leaves params
+        untouched.
+    kv_quant : narrow dtype name to store full-context KV caches as
+        per-position narrow values + f32 scales (local ring buffers stay
+        wide); None (default) keeps the wide cache bit-for-bit.
     """
 
     def __init__(self, params, cfg, *, max_seq: int,
                  dispatch: Optional[str] = None,
                  two_phase: Optional[bool] = None,
                  temperature: float = 0.0, sample_seed: int = 3,
-                 pipeline_depth: int = 0):
+                 pipeline_depth: int = 0,
+                 quantize_experts: Optional[str] = None,
+                 kv_quant: Optional[str] = None):
         super().__init__(params, cfg, dispatch=dispatch, two_phase=two_phase,
                          temperature=temperature, sample_seed=sample_seed,
-                         pipeline_depth=pipeline_depth)
+                         pipeline_depth=pipeline_depth,
+                         quantize_experts=quantize_experts,
+                         kv_quant=kv_quant)
         self.max_seq = max_seq
         self._decode_fused = jax.jit(
             lambda p, c, pos, tok: M.decode_step(p, cfg, c, pos, tok))
@@ -361,12 +380,14 @@ class ServeLoop(_ServeBase):
             logits, cache, pos = M.prefill_layered(
                 self.params, prompts, self.cfg, max_seq=self.max_seq,
                 embeddings=embeddings, moe_fn=self._moe_two_phase,
-                route_ahead=self.pipeline_depth > 0)
+                route_ahead=self.pipeline_depth > 0,
+                kv_quant=self.kv_quant)
         else:
             with self._dispatch_ctx():
                 logits, cache, pos = M.prefill(self.params, prompts, self.cfg,
                                                max_seq=self.max_seq,
-                                               embeddings=embeddings)
+                                               embeddings=embeddings,
+                                               kv_quant=self.kv_quant)
         logits, cache = jax.block_until_ready((logits, cache))
         self._pipe.drain()   # prefill executes all completed with logits
         self.stats.append(StepStat(
@@ -566,10 +587,14 @@ class ServeScheduler(_ServeBase):
                  two_phase: Optional[bool] = None,
                  temperature: float = 0.0, sample_seed: int = 3,
                  batch_min_bucket: int = 1, cache_dtype=jnp.bfloat16,
-                 pipeline_depth: int = 0):
+                 pipeline_depth: int = 0,
+                 quantize_experts: Optional[str] = None,
+                 kv_quant: Optional[str] = None):
         super().__init__(params, cfg, dispatch=dispatch, two_phase=two_phase,
                          temperature=temperature, sample_seed=sample_seed,
-                         pipeline_depth=pipeline_depth)
+                         pipeline_depth=pipeline_depth,
+                         quantize_experts=quantize_experts,
+                         kv_quant=kv_quant)
         self.max_seq = max_seq
         self.batch_min_bucket = batch_min_bucket
         # allocate the slot pool at its own bucket so every step bucket,
@@ -578,7 +603,7 @@ class ServeScheduler(_ServeBase):
                                            minimum=batch_min_bucket)
         self.cache_dtype = cache_dtype
         self.cache = M.init_cache(cfg, self.n_slots, max_seq,
-                                  dtype=cache_dtype)
+                                  dtype=cache_dtype, kv_quant=kv_quant)
         self.slots: List[Optional[Request]] = [None] * self.n_slots
         self.queue: Deque[Request] = collections.deque()
         self.finished: List[Request] = []
@@ -646,12 +671,13 @@ class ServeScheduler(_ServeBase):
             logits, cache1, pos = M.prefill_layered(
                 self.params, prompts, self.cfg, max_seq=self.max_seq,
                 cache_dtype=self.cache_dtype, moe_fn=self._moe_two_phase,
-                route_ahead=self.pipeline_depth > 0)
+                route_ahead=self.pipeline_depth > 0,
+                kv_quant=self.kv_quant)
         else:
             with self._dispatch_ctx():
                 logits, cache1, pos = M.prefill(
                     self.params, prompts, self.cfg, max_seq=self.max_seq,
-                    cache_dtype=self.cache_dtype)
+                    cache_dtype=self.cache_dtype, kv_quant=self.kv_quant)
         logits, cache1 = jax.block_until_ready((logits, cache1))
         self._pipe.drain()   # prefill executes all completed with logits
         dt = time.monotonic() - t0
@@ -850,6 +876,14 @@ def main():
                     help="--continuous: number of synthetic requests")
     ap.add_argument("--slots", type=int, default=4,
                     help="--continuous: resident slot pool size")
+    ap.add_argument("--quantize-experts", default=None,
+                    choices=["fp8_e4m3", "fp8_e5m2", "int8"],
+                    help="BlockQuant the expert FFN weights to this narrow "
+                         "dtype (per-output-channel f32 scales)")
+    ap.add_argument("--kv-quant", default=None,
+                    choices=["fp8_e4m3", "fp8_e5m2", "int8"],
+                    help="store full-context KV caches as narrow values + "
+                         "per-position f32 scales")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -867,7 +901,9 @@ def main():
             params, cfg, max_seq=max_seq, max_slots=args.slots,
             dispatch=dispatch, two_phase=two_phase,
             temperature=args.temperature,
-            pipeline_depth=args.pipeline_depth)
+            pipeline_depth=args.pipeline_depth,
+            quantize_experts=args.quantize_experts,
+            kv_quant=args.kv_quant)
         for _ in range(args.requests):
             plen = int(rng.integers(max(2, args.prompt_len // 2),
                                     args.prompt_len + 1))
@@ -907,7 +943,8 @@ def main():
 
     loop = ServeLoop(
         params, cfg, max_seq=max_seq, dispatch=dispatch, two_phase=two_phase,
-        temperature=args.temperature, pipeline_depth=args.pipeline_depth)
+        temperature=args.temperature, pipeline_depth=args.pipeline_depth,
+        quantize_experts=args.quantize_experts, kv_quant=args.kv_quant)
     gen = loop.run(prompts, args.gen, embeddings=emb)
     s = loop.summary()
 

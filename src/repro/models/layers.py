@@ -224,7 +224,7 @@ def chunked_attention(q, k, v, *, causal=True, window=None, chunk=1024):
 
 def apply_attention(p, x, cfg: ArchConfig, *, window=None, positions=None,
                     impl: str = "chunked", cache=None, cache_len=None,
-                    collect_kv: int = 0):
+                    collect_kv: int = 0, kv_quant: Optional[str] = None):
     """Self-attention (train/prefill) or one-step decode when ``cache`` given.
 
     cache: dict(k=(B,Hkv,S,hd), v=...) -- updated functionally; ``cache_len``
@@ -236,6 +236,13 @@ def apply_attention(p, x, cfg: ArchConfig, *, window=None, positions=None,
     ``collect_kv``: when > 0 (prefill), also return a fresh KV cache of that
     capacity filled with this call's keys/values (window-truncated for local
     layers).
+    ``kv_quant``: narrow dtype name ("fp8_e4m3"/"fp8_e5m2"/"int8") to store
+    the collected cache as per-position BlockQuant values (``k``/``v``
+    narrow + ``k_scale``/``v_scale`` f32 over head_dim).  Only applies to
+    full-context layers (``window is None``) -- local ring buffers stay
+    wide.  Decode auto-detects a quantized cache by its ``k_scale`` leaf:
+    new keys/values are quantized per position before the scatter and the
+    whole cache is dequantized to the query dtype before attention.
     Returns (out, new_cache).
     """
     B, S, d = x.shape
@@ -265,26 +272,58 @@ def apply_attention(p, x, cfg: ArchConfig, *, window=None, positions=None,
                 pad = cap - S
                 kc = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
                 vc = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-            new_cache = {"k": kc, "v": vc}
+            if kv_quant is not None and not window:
+                from repro.core import precision
+                qk, sk = precision.quantize_rows(kc, kv_quant)
+                qv, sv = precision.quantize_rows(vc, kv_quant)
+                new_cache = {"k": qk, "k_scale": sk, "v": qv, "v_scale": sv}
+            else:
+                new_cache = {"k": kc, "v": vc}
     else:
         assert S == 1
+        quant = "k_scale" in cache
+        if quant:
+            from repro.core import precision
+            qname = precision.quant_name(cache["k"].dtype)
         pos = jnp.asarray(cache_len)
         if pos.ndim:  # per-row fill pointers (continuous batching)
             pos = pos.reshape(-1).astype(jnp.int32)
             q, k1, v1 = _qkv(p, x, cfg, pos[:, None, None])
             b_idx = jnp.arange(B)
-            kc = cache["k"].at[b_idx, :, pos].set(
-                k1[:, :, 0].astype(cache["k"].dtype))
-            vc = cache["v"].at[b_idx, :, pos].set(
-                v1[:, :, 0].astype(cache["v"].dtype))
+            if quant:
+                qk1, sk1 = precision.quantize_rows(k1[:, :, 0], qname)
+                qv1, sv1 = precision.quantize_rows(v1[:, :, 0], qname)
+                kc = cache["k"].at[b_idx, :, pos].set(qk1)
+                vc = cache["v"].at[b_idx, :, pos].set(qv1)
+                ks = cache["k_scale"].at[b_idx, :, pos].set(sk1)
+                vs = cache["v_scale"].at[b_idx, :, pos].set(sv1)
+            else:
+                kc = cache["k"].at[b_idx, :, pos].set(
+                    k1[:, :, 0].astype(cache["k"].dtype))
+                vc = cache["v"].at[b_idx, :, pos].set(
+                    v1[:, :, 0].astype(cache["v"].dtype))
         else:
             pos = pos.reshape(())  # scalar fill pointer
             q, k1, v1 = _qkv(p, x, cfg, jnp.full((1,), pos))
-            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype), pos, axis=2)
-            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype), pos, axis=2)
+            if quant:
+                qk1, sk1 = precision.quantize_rows(k1, qname)
+                qv1, sv1 = precision.quantize_rows(v1, qname)
+                kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], qk1, pos, axis=2)
+                vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], qv1, pos, axis=2)
+                ks = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], sk1, pos, axis=2)
+                vs = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], sv1, pos, axis=2)
+            else:
+                kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype), pos, axis=2)
+                vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype), pos, axis=2)
         from repro.kernels.flash_attention.ops import decode_attention
-        out = decode_attention(q, kc, vc, kv_len=pos + 1, window=window)
-        new_cache = {"k": kc, "v": vc}
+        if quant:
+            out = decode_attention(q, precision.dequantize_rows(kc, ks, q.dtype),
+                                   precision.dequantize_rows(vc, vs, q.dtype),
+                                   kv_len=pos + 1, window=window)
+            new_cache = {"k": kc, "k_scale": ks, "v": vc, "v_scale": vs}
+        else:
+            out = decode_attention(q, kc, vc, kv_len=pos + 1, window=window)
+            new_cache = {"k": kc, "v": vc}
     out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.hd)
     return out @ p["wo"].astype(out.dtype), new_cache
 

@@ -84,17 +84,22 @@ def _window_for(kind: str, cfg: ArchConfig) -> Optional[int]:
 
 
 def apply_block(kind: str, p: Params, x, cfg: ArchConfig, *, impl="chunked",
-                cache=None, pos=None, collect_kv: int = 0, moe_fn=None):
+                cache=None, pos=None, collect_kv: int = 0, moe_fn=None,
+                kv_quant: Optional[str] = None):
     """One sub-layer. Returns (x, new_cache). ``collect_kv`` > 0 makes the
     prefill path emit a decode cache of that capacity.  ``moe_fn`` overrides
     ``moe.apply_moe`` for attn+moe blocks (same signature/returns) -- the
-    two-phase serving loop injects its route-then-execute stage here."""
+    two-phase serving loop injects its route-then-execute stage here.
+    ``kv_quant`` (prefill only) collects full-context attention caches as
+    per-position narrow values + f32 scales (see ``layers.apply_attention``);
+    decode detects a quantized cache by its scale leaves, no flag needed."""
     if kind in ATTN_KINDS:
         h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
         attn_cache = cache.get("attn") if cache else None
         a, new_attn = L.apply_attention(
             p["attn"], h, cfg, window=_window_for(kind, cfg), impl=impl,
-            cache=attn_cache, cache_len=pos, collect_kv=collect_kv)
+            cache=attn_cache, cache_len=pos, collect_kv=collect_kv,
+            kv_quant=kv_quant)
         x = x + a
         h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
         moe_counts = None
@@ -263,11 +268,28 @@ def loss_fn(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
     return total / (h.shape[0] * Sm1)
 
 
+def _cache_to_dtype(cache, cd, cache_dtype):
+    """Convert compute-dtype cache leaves to the decode cache dtype,
+    leaving quantization scale leaves (``k_scale``/``v_scale``) untouched --
+    they are f32 by contract even when the compute dtype is f32."""
+    skip = ("k_scale", "v_scale")
+
+    def conv(path, a):
+        if path and getattr(path[-1], "key", None) in skip:
+            return a
+        return a.astype(cache_dtype) if a.dtype == cd else a
+
+    return jax.tree_util.tree_map_with_path(conv, cache)
+
+
 def prefill(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
             max_seq: int, embeddings: Optional[jax.Array] = None,
-            impl: str = "chunked", cache_dtype=jnp.bfloat16):
+            impl: str = "chunked", cache_dtype=jnp.bfloat16,
+            kv_quant: Optional[str] = None):
     """Serving prefill: forward over the prompt, emitting (last_logits,
-    decode cache filled to ``tokens`` length, next position)."""
+    decode cache filled to ``tokens`` length, next position).  ``kv_quant``
+    stores full-context KV caches as per-position narrow values + f32
+    scales (local ring buffers stay wide)."""
     pol = precision_policy(cfg.policy)
     cd = pol.compute_dtype
     x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
@@ -280,7 +302,7 @@ def prefill(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
     if "prologue" in params:
         def pro_body(x, p_slice):
             y, c = apply_block(cfg.block_unit[0], p_slice, x, cfg, impl=impl,
-                               collect_kv=max_seq)
+                               collect_kv=max_seq, kv_quant=kv_quant)
             return y, c
         x, pro_cache = jax.lax.scan(pro_body, x, params["prologue"])
         cache["prologue"] = pro_cache
@@ -291,12 +313,12 @@ def prefill(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
         y = x
         for slot, kind in enumerate(cfg.block_unit):
             y, c = apply_block(kind, p_slots[slot], y, cfg, impl=impl,
-                               collect_kv=max_seq)
+                               collect_kv=max_seq, kv_quant=kv_quant)
             slot_caches.append(c)
         if cfg.shared_attn_every:
             fire = (step_idx % cfg.shared_attn_every) == (cfg.shared_attn_every - 1)
             y2, c2 = apply_block("shared_attn", shared_p, y, cfg, impl=impl,
-                                 collect_kv=max_seq)
+                                 collect_kv=max_seq, kv_quant=kv_quant)
             y = jnp.where(fire, y2, y)
             slot_caches.append(c2)
         return y, tuple(slot_caches)
@@ -309,15 +331,14 @@ def prefill(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
     unemb = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
     logits = (x_last @ unemb.astype(cd)).astype(jnp.float32)
     # KV caches collected in compute dtype; convert to the decode cache dtype
-    cache = jax.tree.map(
-        lambda a: a.astype(cache_dtype) if a.dtype == cd else a, cache)
+    cache = _cache_to_dtype(cache, cd, cache_dtype)
     return logits, cache, jnp.asarray(S_total, jnp.int32)
 
 
 # --------------------------------------------------------------- decode -----
 
 def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
-               dtype=jnp.bfloat16) -> Params:
+               dtype=jnp.bfloat16, kv_quant: Optional[str] = None) -> Params:
     """Stacked decode caches, one entry per slot (+ shared-attn slot).
 
     Every leaf carries the batch at dim 1 ((n_repeats, B, ...)), and all
@@ -332,9 +353,21 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
 
     def attn_cache(window):
         Lc = min(max_seq, window) if window else max_seq
+        shp = (cfg.n_repeats, batch, Hkv, Lc, hd)
+        if kv_quant is not None and not window:
+            # Quantized full-context cache: narrow values + per-position
+            # f32 scales (scale 1.0 = the all-zero convention of
+            # precision.quantize_rows).  Local ring buffers stay wide.
+            from repro.core import precision
+            qdt = precision.QUANT_DTYPES[kv_quant]
+            return {"attn": {
+                "k": jnp.zeros(shp, qdt),
+                "k_scale": jnp.ones(shp[:-1], jnp.float32),
+                "v": jnp.zeros(shp, qdt),
+                "v_scale": jnp.ones(shp[:-1], jnp.float32)}}
         return {"attn": {
-            "k": jnp.zeros((cfg.n_repeats, batch, Hkv, Lc, hd), dtype),
-            "v": jnp.zeros((cfg.n_repeats, batch, Hkv, Lc, hd), dtype)}}
+            "k": jnp.zeros(shp, dtype),
+            "v": jnp.zeros(shp, dtype)}}
 
     def mamba_cache():
         d_in = cfg.ssm_expand * d
@@ -584,22 +617,24 @@ def _layer_decode_attn_route_jit(cfg: ArchConfig, capacity: int):
 
 @functools.lru_cache(maxsize=None)
 def _layer_prefill_jit(cfg: ArchConfig, kind: str, collect_kv: int,
-                       impl: str):
+                       impl: str, kv_quant: Optional[str] = None):
     """Whole-layer prefill step (cache-collecting forward)."""
     def fn(p, x):
-        return apply_block(kind, p, x, cfg, impl=impl, collect_kv=collect_kv)
+        return apply_block(kind, p, x, cfg, impl=impl, collect_kv=collect_kv,
+                           kv_quant=kv_quant)
     return jax.jit(fn)
 
 
 @functools.lru_cache(maxsize=None)
 def _layer_prefill_attn_head_jit(cfg: ArchConfig, kind: str, collect_kv: int,
-                                 impl: str):
+                                 impl: str, kv_quant: Optional[str] = None):
     """Prefill attention half of an attn+moe layer (up to the MoE yield)."""
     def fn(p, x):
         h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
         a, new_attn = L.apply_attention(
             p["attn"], h, cfg, window=_window_for(kind, cfg), impl=impl,
-            cache=None, cache_len=None, collect_kv=collect_kv)
+            cache=None, cache_len=None, collect_kv=collect_kv,
+            kv_quant=kv_quant)
         x = x + a
         h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
         return x, h, new_attn
@@ -608,7 +643,8 @@ def _layer_prefill_attn_head_jit(cfg: ArchConfig, kind: str, collect_kv: int,
 
 @functools.lru_cache(maxsize=None)
 def _layer_prefill_attn_route_jit(cfg: ArchConfig, kind: str,
-                                  collect_kv: int, impl: str, capacity: int):
+                                  collect_kv: int, impl: str, capacity: int,
+                                  kv_quant: Optional[str] = None):
     """Prefill twin of :func:`_layer_decode_attn_route_jit`: attention half
     fused with MoE route phase 1 for a fresh sequence (zero occupancy,
     position 0); ``capacity`` is static per prompt length."""
@@ -616,7 +652,8 @@ def _layer_prefill_attn_route_jit(cfg: ArchConfig, kind: str,
         h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
         a, new_attn = L.apply_attention(
             p["attn"], h, cfg, window=_window_for(kind, cfg), impl=impl,
-            cache=None, cache_len=None, collect_kv=collect_kv)
+            cache=None, cache_len=None, collect_kv=collect_kv,
+            kv_quant=kv_quant)
         x = x + a
         h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
         ph1 = moe.route_phase1(p["ffn"]["router"], h, cfg, None, 0, capacity)
@@ -753,7 +790,8 @@ def decode_step_layered(params: Params, cfg: ArchConfig, cache, pos,
 def prefill_layered(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
                     max_seq: int, embeddings: Optional[jax.Array] = None,
                     impl: str = "chunked", cache_dtype=jnp.bfloat16,
-                    moe_fn=None, route_ahead: bool = False):
+                    moe_fn=None, route_ahead: bool = False,
+                    kv_quant: Optional[str] = None):
     """Serving prefill, layer by layer: same function as :func:`prefill`
     but with the repeat loop unrolled in Python so a serving loop can
     interleave host work (two-phase MoE routing) between layers.  This is
@@ -782,17 +820,17 @@ def prefill_layered(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
         if kind == "attn+moe" and moe_fn is not None:
             if route_ahead:
                 x, h, new_attn, ph1 = _layer_prefill_attn_route_jit(
-                    cfg, kind, max_seq, impl, route_cap)(p_i, x)
+                    cfg, kind, max_seq, impl, route_cap, kv_quant)(p_i, x)
                 f, moe_counts = moe_fn(p_i["ffn"], h, cfg, counts=None,
                                        pos=None,
                                        phase1=moe.Phase1(*ph1, route_cap))
             else:
                 x, h, new_attn = _layer_prefill_attn_head_jit(
-                    cfg, kind, max_seq, impl)(p_i, x)
+                    cfg, kind, max_seq, impl, kv_quant)(p_i, x)
                 f, moe_counts = moe_fn(p_i["ffn"], h, cfg, counts=None,
                                        pos=None)
             return x + f, {"attn": new_attn, "moe": moe_counts}
-        return _layer_prefill_jit(cfg, kind, max_seq, impl)(p_i, x)
+        return _layer_prefill_jit(cfg, kind, max_seq, impl, kv_quant)(p_i, x)
 
     if "prologue" in params:
         pro = []
@@ -813,7 +851,7 @@ def prefill_layered(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
             # residual only advances on fire steps
             fire = (i % cfg.shared_attn_every) == (cfg.shared_attn_every - 1)
             y2, c2 = _layer_prefill_jit(cfg, "shared_attn", max_seq,
-                                        impl)(shared_p, x)
+                                        impl, kv_quant)(shared_p, x)
             if fire:
                 x = y2
             new_slots.append(c2)
@@ -824,6 +862,5 @@ def prefill_layered(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
 
     logits = _final_logits_jit(cfg, True)(params["final_norm"],
                                           _unemb_param(params, cfg), x)
-    cache = jax.tree.map(
-        lambda a: a.astype(cache_dtype) if a.dtype == cd else a, cache)
+    cache = _cache_to_dtype(cache, cd, cache_dtype)
     return logits, cache, jnp.asarray(S_total, jnp.int32)

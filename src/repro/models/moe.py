@@ -66,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.formats import _pytree_dataclass
+from repro.core.precision import QuantTensor, quantize_tensor
 from repro.models.config import ArchConfig
 from repro.models.layers import init_mlp, apply_mlp
 
@@ -94,16 +95,86 @@ def init_moe(key, cfg: ArchConfig):
     return p
 
 
+def _wcast(w, cd):
+    """Weight accessor of the expert GEMMs: dequantize BlockQuant weights
+    (narrow values * per-channel f32 scales) or plain-cast wide ones."""
+    if isinstance(w, QuantTensor):
+        return w.dequantize(cd)
+    return w.astype(cd)
+
+
 def _expert_ffn(experts, xe, mlp_type: str):
     """xe: (E, C, d) -> (E, C, d); batched over the expert dim (EP shards it)."""
     cd = xe.dtype
     if mlp_type == "swiglu":
-        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, experts["w_gate"].astype(cd)))
-        h = h * jnp.einsum("ecd,edf->ecf", xe, experts["w_up"].astype(cd))
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, _wcast(experts["w_gate"], cd)))
+        h = h * jnp.einsum("ecd,edf->ecf", xe, _wcast(experts["w_up"], cd))
     else:
         h = jnp.square(jax.nn.relu(
-            jnp.einsum("ecd,edf->ecf", xe, experts["w_up"].astype(cd))))
-    return jnp.einsum("ecf,efd->ecd", h, experts["w_down"].astype(cd))
+            jnp.einsum("ecd,edf->ecf", xe, _wcast(experts["w_up"], cd))))
+    return jnp.einsum("ecf,efd->ecd", h, _wcast(experts["w_down"], cd))
+
+
+def quantize_expert_weights(params, dtype, *, rounding: str = "nearest",
+                            seed: int = 0):
+    """Opt-in BlockQuant of the expert FFN weights (the serving memory hog:
+    ``E`` copies of every MLP matrix).
+
+    Each ``experts`` leaf ``(..., E, d_in, d_out)`` becomes a
+    :class:`~repro.core.precision.QuantTensor` with one f32 scale per
+    (expert, output channel) -- scales over the contraction axis ``-2``, so
+    the quantization error of one input channel never leaks across output
+    channels.  The negative axis makes the QuantTensor *slice-stable*: a
+    repeat-stacked leaf ``(n_repeats, E, d_in, d_out)`` keeps a valid axis
+    after ``lax.scan`` / ``_tree_take`` strip the leading dim.  Router /
+    shared-expert / non-MoE params are untouched, and the QuantTensor
+    leaves flow through ``execute_moe[_jit]`` / ``apply_moe`` transparently
+    (pytree); :func:`_wcast` dequantizes at the einsum boundary.  Returns a
+    new params dict (input unchanged)."""
+    if "experts" not in params:
+        raise ValueError(
+            f"quantize_expert_weights: params has no 'experts' subtree "
+            f"(keys: {sorted(params)})")
+    out = dict(params)
+    out["experts"] = {
+        k: quantize_tensor(w, dtype, axis=-2, rounding=rounding, seed=seed)
+        for k, w in params["experts"].items()}
+    return out
+
+
+def quantize_model_experts(params, dtype, *, rounding: str = "nearest",
+                           seed: int = 0):
+    """Model-level twin of :func:`quantize_expert_weights`: walk the stacked
+    block slots (+ prologue) of a full ``model.init_params`` dict and
+    quantize every attn+moe slot's expert weights.  Raises if the model has
+    no MoE slot at all (a silent no-op would masquerade as a memory win)."""
+    def q_slot(slot):
+        if isinstance(slot, dict) and isinstance(slot.get("ffn"), dict) \
+                and "experts" in slot["ffn"]:
+            s = dict(slot)
+            s["ffn"] = quantize_expert_weights(slot["ffn"], dtype,
+                                               rounding=rounding, seed=seed)
+            return s, True
+        return slot, False
+
+    out = dict(params)
+    hit = False
+    if "blocks" in params:
+        new_slots = []
+        for slot in params["blocks"]:
+            s, h = q_slot(slot)
+            hit |= h
+            new_slots.append(s)
+        out["blocks"] = tuple(new_slots)
+    if "prologue" in params:
+        s, h = q_slot(params["prologue"])
+        hit |= h
+        out["prologue"] = s
+    if not hit:
+        raise ValueError(
+            "quantize_model_experts: no attn+moe slot with an 'experts' "
+            "subtree found in params")
+    return out
 
 
 # ----------------------------------------------------------------- routing --

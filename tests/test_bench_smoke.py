@@ -102,6 +102,34 @@ def test_bench_serve_pipelined_ab(serve_results):
             assert pip["timing"]["execute_dispatch_ms"] >= 0.0
 
 
+@pytest.fixture(scope="module")
+def precision_results():
+    sys.path.insert(0, REPO_ROOT)
+    try:
+        from benchmarks import bench_precision
+    finally:
+        sys.path.pop(0)
+    return bench_precision.sweep(smoke=True)
+
+
+def test_bench_precision_smoke(precision_results):
+    """The narrow-precision sweep measures all three quantized dtypes and
+    the BlockQuant contracts hold at bench shapes too: every quantized spmm
+    point is bit-identical to its dequantize-then-f32 reference, and the
+    int8 serving row reproduces the f32 loop's greedy tokens exactly."""
+    spmm = precision_results["spmm"]
+    for name in ("fp8_e4m3", "fp8_e5m2", "int8"):
+        p = spmm["points"][name]
+        assert p["bit_identical_vs_dequant_ref"] is True
+        assert p["time_us"] > 0
+        assert p["rel_err"] < 0.1
+    assert spmm["points"]["f32"]["max_abs_err"] == 0.0
+    serving = precision_results["serving"]
+    assert serving["int8"]["tokens_match_frac"] == 1.0
+    for name in ("fp8_e4m3", "fp8_e5m2", "int8"):
+        assert serving[name]["first_decode_logit_rel_err"] < 0.2
+
+
 def test_bench_serve_signature_bound(serve_results):
     """The batch-bucket law holds under the synthetic trace: phase-2
     recompiles stay within the (batch-bucket x nnzb-bucket x token-shape)
