@@ -1,0 +1,98 @@
+"""Block-sparse attention benchmark: full-grid flash vs the BCSR stream walk.
+
+The contrast this PR ships: long-context sliding-window attention pays the
+full S^2/(bq*bk) KV tile grid in the dense kernel (whole-tile -1e30 masking
+for everything outside the band), while the sparse walk steps only the
+visible-tile stream lowered from the ``BlockMask`` -- roughly
+2*S*W/(bq*bk) tiles for a width-W band.  Each point records the structural
+walked-tile counts (raw and bucket-padded -- the count the compiled grid
+actually steps) next to the measured wall times and an exact-parity flag
+against the dense-masked kernel, so the JSON artifact is both the perf
+record and the correctness record.
+
+CPU wall-clock caveat (benchmarks/common.py): interpret-mode times are
+emulation times, meaningful relatively (tile-count scaling), not absolutely.
+
+  python benchmarks/bench_attention.py           # S=4096 -> BENCH_attention.json
+  python benchmarks/bench_attention.py --smoke   # tiny shapes (CI guard)
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit_bench, row, time_fn
+from repro.core.masks import BlockMask
+from repro.kernels import tuning
+from repro.kernels.flash_attention import ops as fops
+
+
+def run(*, smoke: bool = False) -> dict:
+    if smoke:
+        B, H, S, D, bq, bk = 1, 1, 128, 32, 32, 32
+        iters, warmup = 1, 1
+    else:
+        B, H, S, D, bq, bk = 1, 1, 4096, 64, 128, 128
+        iters, warmup = 3, 1
+    interpret = not tuning.on_tpu()
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, S, D), jnp.float32)
+
+    dense_tiles = (S // bq) * (S // bk)
+    points = []
+    for frac, window in [("1/8", S // 8), ("1/4", S // 4), ("1/2", S // 2)]:
+        mask = BlockMask.sliding_window(S, S, window, bq=bq, bk=bk)
+        walked = mask.lower(bucket=False).capacity
+        bucketed = mask.lower(bucket=True).capacity
+
+        def dense_fn():
+            # the pre-existing kernel: full KV grid, whole-tile masking
+            return fops.attention(q, k, v, causal=True, window=window,
+                                  bq=bq, bk=bk, interpret=interpret)
+
+        def sparse_fn():
+            return fops.attention(q, k, v, mask=mask, mask_impl="sparse",
+                                  interpret=interpret)
+
+        t_dense = time_fn(dense_fn, warmup=warmup, iters=iters)
+        t_sparse = time_fn(sparse_fn, warmup=warmup, iters=iters)
+        parity = bool(np.array_equal(np.asarray(sparse_fn()),
+                                     np.asarray(dense_fn())))
+        points.append({
+            "window": window, "window_frac": frac,
+            "walked_tiles": walked,
+            "walked_tiles_bucketed": bucketed,
+            "dense_tiles": dense_tiles,
+            "tile_reduction": dense_tiles / bucketed,
+            "t_dense_us": t_dense * 1e6,
+            "t_sparse_us": t_sparse * 1e6,
+            "speedup": t_dense / t_sparse,
+            "parity_bit_identical": parity,
+        })
+
+    return {"shape": {"B": B, "H": H, "S": S, "D": D, "bq": bq, "bk": bk},
+            "dense_tiles": dense_tiles, "points": points,
+            "interpret": interpret, "smoke": smoke}
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    results = run(smoke=smoke)
+    rows = []
+    for p in results["points"]:
+        detail = (f"W={p['window']};walked={p['walked_tiles']}"
+                  f"(bucket {p['walked_tiles_bucketed']})"
+                  f"/dense={p['dense_tiles']};speedup={p['speedup']:.2f}x"
+                  f";parity={p['parity_bit_identical']}")
+        rows.append(row("attention/sparse_walk", p["t_sparse_us"], detail))
+        rows.append(row("attention/dense_grid", p["t_dense_us"],
+                        f"W={p['window']}"))
+    results["rows"] = rows
+    path = emit_bench("attention", results)
+    print("\n".join(rows))
+    print(f"# wrote {path}")

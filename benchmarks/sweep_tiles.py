@@ -19,6 +19,13 @@ Axes swept per op:
     the bucket trades zero-block stream work against phase-2 recompiles, so
     the sweep scores ``route+execute`` wall time of a decode-shaped step
     per floor.
+  * ``flash``         -- (bq, bk) on a causal prefill shape, dense grid and
+    the block-sparse sliding-window walk.  The sparse rows carry their
+    walked-tile counts (bk is also the mask's pattern resolution: narrower
+    KV tiles prune the window edge tighter but walk a longer stream); the
+    winner registers the base ``flash_sparse`` row plus a per-pattern
+    ``{"patterns": {"window": ...}}`` override (``tuning
+    .flash_sparse_tiles``).
 
 Run modes:
   python benchmarks/sweep_tiles.py                 # full sweep + register
@@ -136,9 +143,84 @@ def sweep_moe_bucket(*, smoke: bool = False, register: bool = True) -> dict:
             "points": points, "winner": best, "registered": bool(register)}
 
 
+def sweep_flash(*, smoke: bool = False, register: bool = True) -> dict:
+    """Sweep flash-attention (bq, bk) on a causal prefill shape: the dense
+    full-grid kernel and the block-sparse sliding-window walk, every point
+    parity-checked against the bq/bk-independent jnp oracle.  Winners go to
+    the ``"flash"`` row and the ``"flash_sparse"`` row (base + a
+    ``"patterns": {"window": ...}`` override -- the sparse walk may prefer a
+    different KV tile than the dense grid, since bk doubles as the mask's
+    pattern resolution)."""
+    from repro.core.masks import BlockMask
+    from repro.kernels.flash_attention import ops as fops
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    rng = jax.random.split(jax.random.PRNGKey(0), 3)
+    if smoke:
+        B, H, S, D = 1, 1, 64, 16
+        tiles = ((16, 16), (16, 32))
+    else:
+        B, H, S, D = 1, 2, 1024, 64
+        tiles = ((64, 64), (64, 128), (128, 128), (128, 256))
+    window = S // 4
+    q = jax.random.normal(rng[0], (B, H, S, D), jnp.float32)
+    k = jax.random.normal(rng[1], (B, H, S, D), jnp.float32)
+    v = jax.random.normal(rng[2], (B, H, S, D), jnp.float32)
+    interpret = not tuning.on_tpu()
+    ref = np.asarray(attention_ref(q, k, v, causal=True, window=window))
+
+    dense_pts, sparse_pts = [], []
+    for bq, bk in tiles:
+        t_d = time_fn(lambda bq=bq, bk=bk: fops.attention(
+            q, k, v, causal=True, window=window, bq=bq, bk=bk,
+            interpret=interpret), warmup=1, iters=3)
+        out = np.asarray(fops.attention(q, k, v, causal=True, window=window,
+                                        bq=bq, bk=bk, interpret=interpret))
+        ok = bool(np.allclose(out, ref, atol=2e-3, rtol=2e-3))
+        dense_pts.append({"bq": bq, "bk": bk, "t_us": t_d * 1e6,
+                          "tiles": (S // bq) * (S // bk), "parity": ok})
+
+        mask = BlockMask.sliding_window(S, S, window, bq=bq, bk=bk)
+        t_s = time_fn(lambda q=q, mask=mask: fops.attention(
+            q, k, v, mask=mask, mask_impl="sparse", interpret=interpret),
+            warmup=1, iters=3)
+        outs = np.asarray(fops.attention(q, k, v, mask=mask,
+                                         mask_impl="sparse",
+                                         interpret=interpret))
+        oks = bool(np.allclose(outs, ref, atol=2e-3, rtol=2e-3))
+        sparse_pts.append({"bq": bq, "bk": bk, "t_us": t_s * 1e6,
+                           "walked_tiles": mask.lower(bucket=True).capacity,
+                           "parity": oks})
+    assert all(p["parity"] for p in dense_pts + sparse_pts), \
+        "flash sweep found divergence from the oracle"
+    # TPU scores structure first (walked tiles ~ HBM traffic), CPU time only
+    # (interpret emulation swamps the stream contrast at sweep shapes).
+    d_key = ((lambda p: (p["tiles"], p["t_us"])) if tuning.on_tpu()
+             else (lambda p: p["t_us"]))
+    s_key = ((lambda p: (p["walked_tiles"], p["t_us"])) if tuning.on_tpu()
+             else (lambda p: p["t_us"]))
+    best_d = min(dense_pts, key=d_key)
+    best_s = min(sparse_pts, key=s_key)
+    if register:
+        tuning.register("flash", jnp.float32,
+                        {"bq": best_d["bq"], "bk": best_d["bk"]})
+        base = tuning._row("flash_sparse", jnp.float32)
+        tuning.register("flash_sparse", jnp.float32, {
+            "bq": base["bq"], "bk": base["bk"],
+            "patterns": {**base.get("patterns", {}),
+                         "window": {"bq": best_s["bq"], "bk": best_s["bk"]}}})
+    return {"shape": {"B": B, "H": H, "S": S, "D": D, "window": window},
+            "dense_points": dense_pts, "sparse_points": sparse_pts,
+            "points": dense_pts + sparse_pts,
+            "winner": {**best_s, "dense_bq": best_d["bq"],
+                       "dense_bk": best_d["bk"]},
+            "registered": bool(register)}
+
+
 def run(*, smoke: bool = False, register: bool = True) -> dict:
     return {"spmm": sweep_spmm(smoke=smoke, register=register),
-            "moe_dispatch": sweep_moe_bucket(smoke=smoke, register=register)}
+            "moe_dispatch": sweep_moe_bucket(smoke=smoke, register=register),
+            "flash": sweep_flash(smoke=smoke, register=register)}
 
 
 if __name__ == "__main__":

@@ -5,6 +5,8 @@ from repro.core.formats import (BCSR, CSR, INVALID_KEY, BatchedBCSR, SortedCOO,
                                 bcsr_from_dense, coo_from_dense,
                                 csr_from_dense, powerlaw_sparse,
                                 random_dense_sparse)
+from repro.core.masks import (NEG_INF, AttnMaskSpec, BlockMask, MaskStream,
+                              next_pow2)
 from repro.core.precision import LADDER, PrecisionPolicy, policy
 from repro.core.stencils import STENCILS, StencilSpec, apply_reference
 from repro.core.streams import IndirectStream, StreamSpec
@@ -16,6 +18,7 @@ __all__ = [
     "banded_sparse", "batched_bcsr_from_dense", "bcsr_from_dense",
     "coo_from_dense", "csr_from_dense",
     "powerlaw_sparse", "random_dense_sparse",
+    "NEG_INF", "AttnMaskSpec", "BlockMask", "MaskStream", "next_pow2",
     "LADDER", "PrecisionPolicy", "policy",
     "STENCILS", "StencilSpec", "apply_reference",
     "IndirectStream", "StreamSpec",

@@ -34,6 +34,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.formats import BCSR, INVALID_KEY, BatchedBCSR
@@ -477,3 +478,72 @@ def shard_spmspm(a_keys, a_vals, b_keys, b_vals, *,
         asc = _pad_dim(asc, 0, rt, value=1.0)
         return fn(ak, av, asc, bk, bv)[:R, :C]
     return fn(ak, av, bk, bv)[:R, :C]
+
+
+# ---------------------------------------------------------------------------
+# Block-sparse attention: query-axis sharding of the BlockMask stream walk.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _sharded_attention_sparse_fn(mesh: Mesh, axis: str, s_loc: int,
+                                 skv: int, window: Optional[int], bq: int,
+                                 bk: int, scale: Optional[float],
+                                 interpret: bool):
+    from repro.kernels.flash_attention.kernel import flash_attention_sparse
+
+    def local(q, k, v, rows, cols, kinds):
+        # Per-shard absolute query offset keeps causal/window refinements
+        # exact -- the sharded-flash q_offset recipe, stream-walk edition.
+        off = jax.lax.axis_index(axis) * s_loc
+        return flash_attention_sparse(q, k, v, rows[0], cols[0], kinds[0],
+                                      skv=skv, window=window, scale=scale,
+                                      bq=bq, bk=bk, q_offset=off,
+                                      interpret=interpret)
+
+    return jax.jit(compat_shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, None, axis, None), P(), P(),
+                  P(axis), P(axis), P(axis)),
+        out_specs=P(None, None, axis, None),
+        check=False,
+    ))
+
+
+def shard_attention_sparse(q: jax.Array, k: jax.Array, v: jax.Array, mask, *,
+                           mesh: Optional[Mesh] = None,
+                           scale: Optional[float] = None,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Block-sparse flash attention with the query axis sharded.
+
+    The ``shard_spmm_batched_stream`` recipe applied to attention: the
+    BlockMask is split into per-shard row sub-masks (``mask.shard_rows``),
+    each lowered to the common power-of-two bucket capacity so every device
+    runs the same compiled stream shape; K/V are replicated, queries are
+    partitioned, and a per-shard ``q_offset`` (from ``axis_index``) keeps
+    the absolute-position causal/window refinements exact.
+
+    ``mask`` must cover (Sq, Skv) with Sq % (n_dev * bq) == 0.
+    """
+    mesh, axis = auto_mesh(mesh)
+    n_dev = mesh.shape[axis]
+    interpret = _interpret_default(interpret)
+    B, Hq, Sq, D = q.shape
+    Skv = k.shape[2]
+    assert mask.sq == Sq and mask.skv == Skv, (mask.sq, mask.skv, Sq, Skv)
+    assert mask.q_offset == 0, "shard_attention_sparse wants the full mask"
+    assert Sq % (n_dev * mask.bq) == 0, (Sq, n_dev, mask.bq)
+    s_loc = Sq // n_dev
+    kp = (-Skv) % mask.bk
+    if kp:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, kp), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, kp), (0, 0)))
+    subs = mask.shard_rows(n_dev)
+    # Common bucketed capacity: same compiled shape on every device.
+    cap = stream_bucket(max(s.lower(bucket=False).capacity for s in subs))
+    streams = [s.lower(capacity=cap) for s in subs]
+    rows = jnp.asarray(np.stack([s.rows for s in streams]))
+    cols = jnp.asarray(np.stack([s.cols for s in streams]))
+    kinds = jnp.asarray(np.stack([s.kinds for s in streams]))
+    fn = _sharded_attention_sparse_fn(mesh, axis, s_loc, Skv, mask.window,
+                                      mask.bq, mask.bk, scale, interpret)
+    return fn(q, k, v, rows, cols, kinds)

@@ -1,48 +1,131 @@
 """Public flash-attention API: padding, dtype policy, kernel dispatch.
 
-Tile lengths default to the autotune table (``repro.kernels.tuning``, op
-``"flash"``) instead of hardcoded constants; pass ``bq=`` / ``bk=`` to
-override."""
+Tile lengths default to the autotune table (``repro.kernels.tuning``, ops
+``"flash"`` / ``"flash_sparse"``) instead of hardcoded constants; pass
+``bq=`` / ``bk=`` to override.
+
+Block-sparse dispatch: ``attention(..., mask=BlockMask)`` routes through the
+stream-walk kernel (``mask_impl="sparse"``), the masked full-grid kernel
+(``"dense"``, the parity baseline) or the jnp oracle (``"ref"``).  The mask
+lowers to its bucketed index stream at trace time (host numpy on static
+shapes), so recompiles are keyed on (bucketed stream capacity x tile/window
+statics), not on pattern contents -- the PR-3/6 bucket law.
+
+Reference fallbacks are *explicit*: the O(S^2) materialized oracle only runs
+when ``fallback="ref"`` permits it, every use is counted
+(:func:`fallback_count`), and ``fallback="error"`` turns the silent slow
+path into a hard failure for production traffic.
+"""
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.masks import NEG_INF, BlockMask
 from repro.kernels import tuning
-from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+from repro.kernels.flash_attention.kernel import (flash_attention as _kernel,
+                                                  flash_attention_masked,
+                                                  flash_attention_sparse)
 from repro.kernels.flash_attention.ref import attention_ref
 
+# ------------------------------------------------------------------- state
+# Reference-oracle fallback accounting (satellite: no silent O(S^2) paths).
+_FALLBACKS = collections.Counter()
+# Distinct compiled-geometry keys seen by the masked paths -- the recompile
+# accounting surface (pattern signature x bucket bound).
+_MASK_SIGNATURES = set()
 
+
+def fallback_count() -> int:
+    """Total attention_ref fallbacks since the last reset."""
+    return sum(_FALLBACKS.values())
+
+
+def fallback_reasons() -> dict:
+    return dict(_FALLBACKS)
+
+
+def reset_fallbacks() -> None:
+    _FALLBACKS.clear()
+
+
+def mask_signatures() -> frozenset:
+    """Compiled-geometry keys the masked kernels have been traced with; its
+    size bounds the number of mask-path recompiles."""
+    return frozenset(_MASK_SIGNATURES)
+
+
+def reset_mask_signatures() -> None:
+    _MASK_SIGNATURES.clear()
+
+
+def _note_fallback(reason: str, fallback: str):
+    if fallback == "error":
+        raise RuntimeError(
+            f"attention would fall back to the O(S^2) reference ({reason}) "
+            f"but fallback='error' forbids it")
+    if fallback != "ref":
+        raise ValueError(f"fallback must be 'ref' or 'error', got {fallback!r}")
+    _FALLBACKS[reason] += 1
+
+
+# ---------------------------------------------------------------- dispatch
 def attention(q, k, v, *, causal: bool = True, window: int | None = None,
               bq: int | None = None, bk: int | None = None,
-              interpret: bool = False,
-              use_kernel: bool = True) -> jax.Array:
-    """Streaming attention with GQA + causal/sliding-window masks.
+              interpret: bool = False, use_kernel: bool = True,
+              mask: BlockMask | None = None, mask_impl: str = "sparse",
+              fallback: str = "ref") -> jax.Array:
+    """Streaming attention with GQA + causal/sliding-window/BlockMask masks.
 
     Pads Sq/Skv up to tile multiples; returns (B, Hq, Sq, D) in q.dtype.
     ``bq=None`` / ``bk=None`` (default) consult the autotune table -- the
     lookup happens *eagerly here*, outside the jitted body, so a
     ``tuning.register`` (e.g. from a measured sweep) takes effect on the
     next call instead of being baked into an already-compiled program.
+
+    ``mask``: a ``core.masks.BlockMask`` routes through the block-sparse
+    stream walk (``mask_impl="sparse"``), the masked dense grid
+    (``"dense"``) or the jnp oracle (``"ref"``); ``causal``/``window`` are
+    ignored in favor of the mask's own refinements.
+
     ``use_kernel=False`` routes to the jnp reference (used on backends where
-    Pallas is unavailable and for A/B testing).
+    Pallas is unavailable and for A/B testing); with ``fallback="error"``
+    any reference routing -- explicit or shape-forced -- raises instead.
     """
+    if mask is not None:
+        return _attention_masked(q, k, v, mask, impl=mask_impl,
+                                 interpret=interpret, fallback=fallback)
     if bq is None or bk is None:
         Sq, D = q.shape[2], q.shape[3]
         tbq, tbk = tuning.flash_tiles(Sq, k.shape[2], D, q.dtype)
         bq, bk = bq or tbq, bk or tbk
+    # The fallback decision happens *eagerly* (shapes are static here): a
+    # counter bumped inside the jitted body would only fire at trace time.
+    if not use_kernel:
+        _note_fallback("use_kernel=False", fallback)
+        return _ref_jit(q, k, v, causal=causal, window=window)
+    Sq, Skv = q.shape[2], k.shape[2]
+    bk_eff = min(bk, Skv) if Skv % min(bk, Skv) == 0 else bk
+    if not causal and (-Skv) % bk_eff:
+        # Padded KV columns must not attend; under causal=True they sit
+        # outside the horizon (k_pos >= Skv > any real q_pos), but the
+        # non-causal ragged case needs explicit masking -> reference.
+        _note_fallback("noncausal_kv_pad", fallback)
+        return _ref_jit(q, k, v, causal=causal, window=window)
     return _attention_jit(q, k, v, causal=causal, window=window, bq=bq,
-                          bk=bk, interpret=interpret, use_kernel=use_kernel)
+                          bk=bk, interpret=interpret)
+
+
+_ref_jit = jax.jit(attention_ref, static_argnames=("causal", "window",
+                                                   "scale"))
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
-                                             "interpret", "use_kernel"))
-def _attention_jit(q, k, v, *, causal, window, bq, bk, interpret,
-                   use_kernel):
-    if not use_kernel:
-        return attention_ref(q, k, v, causal=causal, window=window)
+                                             "interpret"))
+def _attention_jit(q, k, v, *, causal, window, bq, bk, interpret):
     B, Hq, Sq, D = q.shape
     _, Hkv, Skv, _ = k.shape
     bq_eff = min(bq, Sq) if Sq % min(bq, Sq) == 0 else bq
@@ -55,17 +138,75 @@ def _attention_jit(q, k, v, *, causal, window, bq, bk, interpret,
     if kp:
         kk = jnp.pad(k, ((0, 0), (0, 0), (0, kp), (0, 0)))
         vv = jnp.pad(v, ((0, 0), (0, 0), (0, kp), (0, 0)))
-    # Padded KV columns must not attend: push them outside the causal horizon
-    # by masking via an additive -inf on padded keys is equivalent to the
-    # causal mask when padding sits at the tail and Sq_pad >= Skv positions;
-    # for the general case we mask padded keys with a window trick: padded
-    # keys have k_pos >= Skv > any real q_pos under causal=True. For
-    # non-causal use, fall back to explicit masking in the reference.
-    if not causal and kp:
-        return attention_ref(q, k, v, causal=causal, window=window)
     out = _kernel(qq, kk, vv, causal=causal, window=window, bq=bq_eff,
                   bk=bk_eff, interpret=interpret)
     return out[:, :, :Sq, :]
+
+
+# ------------------------------------------------------- BlockMask dispatch
+@functools.partial(jax.jit, static_argnames=("window", "skv", "bq", "bk",
+                                             "sq", "interpret"))
+def _sparse_jit(q, k, v, rows, cols, kinds, off, *, window, skv, bq, bk, sq,
+                interpret):
+    qp = (-sq) % bq
+    kp = (-skv) % bk
+    qq, kk, vv = q, k, v
+    if qp:
+        qq = jnp.pad(q, ((0, 0), (0, 0), (0, qp), (0, 0)))
+    if kp:
+        kk = jnp.pad(k, ((0, 0), (0, 0), (0, kp), (0, 0)))
+        vv = jnp.pad(v, ((0, 0), (0, 0), (0, kp), (0, 0)))
+    out = flash_attention_sparse(qq, kk, vv, rows, cols, kinds, skv=skv,
+                                 window=window, bq=bq, bk=bk, q_offset=off,
+                                 interpret=interpret)
+    return out[:, :, :sq, :]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "skv", "bq", "bk",
+                                             "sq", "interpret"))
+def _masked_jit(q, k, v, kinds_map, off, *, window, skv, bq, bk, sq,
+                interpret):
+    n_q, n_kv = kinds_map.shape
+    qp = n_q * bq - sq
+    kp = n_kv * bk - skv
+    qq, kk, vv = q, k, v
+    if qp:
+        qq = jnp.pad(q, ((0, 0), (0, 0), (0, qp), (0, 0)))
+    if kp:
+        kk = jnp.pad(k, ((0, 0), (0, 0), (0, kp), (0, 0)))
+        vv = jnp.pad(v, ((0, 0), (0, 0), (0, kp), (0, 0)))
+    out = flash_attention_masked(qq, kk, vv, kinds_map, skv=skv,
+                                 window=window, q_offset=off,
+                                 interpret=interpret)
+    return out[:, :, :sq, :]
+
+
+def _attention_masked(q, k, v, mask: BlockMask, *, impl: str,
+                      interpret: bool, fallback: str = "ref") -> jax.Array:
+    B, Hq, Sq, D = q.shape
+    Skv = k.shape[2]
+    assert mask.sq == Sq and mask.skv == Skv, \
+        (mask.sq, mask.skv, Sq, Skv)
+    off = jnp.asarray([mask.q_offset], jnp.int32)
+    if impl == "ref":
+        _note_fallback("mask_impl=ref", fallback)
+        return attention_ref(q, k, v, mask=mask)
+    if impl == "dense":
+        kinds_map = jnp.asarray(mask.tile_kinds, jnp.int32)
+        _MASK_SIGNATURES.add(("dense", q.shape, k.shape, mask.bq, mask.bk,
+                              mask.window, Sq, Skv))
+        return _masked_jit(q, k, v, kinds_map, off, window=mask.window,
+                           skv=Skv, bq=mask.bq, bk=mask.bk, sq=Sq,
+                           interpret=interpret)
+    if impl != "sparse":
+        raise ValueError(f"mask_impl must be sparse|dense|ref, got {impl!r}")
+    stream = mask.lower(bucket=True)
+    _MASK_SIGNATURES.add(("sparse", q.shape, k.shape, mask.bq, mask.bk,
+                          mask.window, stream.capacity, Sq, Skv))
+    return _sparse_jit(q, k, v, jnp.asarray(stream.rows),
+                       jnp.asarray(stream.cols), jnp.asarray(stream.kinds),
+                       off, window=mask.window, skv=Skv, bq=mask.bq,
+                       bk=mask.bk, sq=Sq, interpret=interpret)
 
 
 def decode_attention(q1, k_cache, v_cache, *, kv_len=None, window=None,
@@ -97,11 +238,11 @@ def decode_attention(q1, k_cache, v_cache, *, kv_len=None, window=None,
     pos = jnp.arange(S)[None, None, None, None, :]
     if kv_len is not None:
         limit = jnp.asarray(kv_len).reshape(-1, 1, 1, 1, 1)
-        s = jnp.where(pos < limit, s, -1e30)
+        s = jnp.where(pos < limit, s, NEG_INF)
         if window is not None:
-            s = jnp.where(pos >= limit - window, s, -1e30)
+            s = jnp.where(pos >= limit - window, s, NEG_INF)
     elif window is not None:
-        s = jnp.where(pos >= S - window, s, -1e30)
+        s = jnp.where(pos >= S - window, s, NEG_INF)
     m = s.max(axis=-1, keepdims=True)
     p = jnp.exp(s - m)                      # unnormalized, like the chunked path
     l = p.sum(axis=-1, keepdims=True)       # f32 row sum

@@ -4,9 +4,17 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.masks import NEG_INF
 
-def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
-    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D). Full-score reference."""
+
+def attention_ref(q, k, v, *, causal=True, window=None, scale=None,
+                  mask=None):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D). Full-score reference.
+
+    ``mask``: a ``core.masks.BlockMask`` (its ``dense_mask()`` oracle is
+    used, overriding ``causal``/``window``) or a dense boolean (Sq, Skv)
+    array.
+    """
     B, Hq, Sq, D = q.shape
     _, Hkv, Skv, _ = k.shape
     g = Hq // Hkv
@@ -15,14 +23,18 @@ def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
     v = jnp.repeat(v, g, axis=1)
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
-    q_pos = jnp.arange(Sq)[:, None]
-    k_pos = jnp.arange(Skv)[None, :]
-    mask = jnp.ones((Sq, Skv), bool)
-    if causal:
-        mask &= q_pos >= k_pos
-    if window is not None:
-        mask &= (q_pos - k_pos) < window
-    s = jnp.where(mask, s, -1e30)
+    if mask is not None:
+        dense = mask.dense_mask() if hasattr(mask, "dense_mask") else mask
+        mask = jnp.asarray(dense, bool)
+    else:
+        q_pos = jnp.arange(Sq)[:, None]
+        k_pos = jnp.arange(Skv)[None, :]
+        mask = jnp.ones((Sq, Skv), bool)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     # Rows with no visible keys (can happen under padding) -> zero output.
     any_visible = mask.any(axis=-1)[None, None, :, None]

@@ -33,15 +33,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import streamwalk
+
 
 def _spmm_kernel(brows_ref, bcols_ref, blocks_ref, b_ref, o_ref, *,
                  bn: int, nt: int, scales_ref=None):
     i = pl.program_id(1)  # position in the nonzero-block stream
     t = pl.program_id(2)  # which resident N-subtile this step accumulates
-    row = brows_ref[i]
-    prev = brows_ref[jnp.maximum(i - 1, 0)]
 
-    @pl.when(((i == 0) | (row != prev)) & (t == 0))
+    @pl.when(streamwalk.row_start(brows_ref, i) & (t == 0))
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
@@ -99,19 +99,18 @@ def spmm_bcsr(block_rows: jax.Array, block_cols: jax.Array, blocks: jax.Array,
     # j outer (N-supertile), i middle (stream walk), t inner (resident
     # sub-tile): per-row accumulation stays contiguous, and the A-block index
     # map is constant in t so each stream block is DMA'd once per i.
-    grid = (N // (nt * bn), nnzb, nt)
+    walk = streamwalk.StreamWalk(outer=1, inner=1)
+    grid = walk.grid((N // (nt * bn),), nnzb, (nt,))
 
     in_specs = [
         # A-block stream: affine walk of the flattened block array;
         # constant across t -> one fetch per stream position.
-        pl.BlockSpec((1, bm, bk),
-                     lambda j, i, t, rows, cols: (i, 0, 0)),
+        walk.stream_spec((1, bm, bk)),
         # Dense operand: the *indirect* stream -- block-col index
         # steers which K-tile the DMA fetches (SU indirection); the
         # pipeline double-buffers the next (bk, bn) tile while the
         # MXU consumes the current one.
-        pl.BlockSpec((bk, bn),
-                     lambda j, i, t, rows, cols: (cols[i], j * nt + t)),
+        walk.indexed_spec((bk, bn), lambda o, col, t: (col, o[0] * nt + t[0])),
     ]
     operands = [block_rows, block_cols, blocks, dense]
     if scales is None:
@@ -120,8 +119,7 @@ def spmm_bcsr(block_rows: jax.Array, block_cols: jax.Array, blocks: jax.Array,
         # Scale stream rides the same affine walk as the A blocks (one
         # (1, 1) scalar per stream position, constant across t).
         kern = functools.partial(_spmm_quant_kernel, bn=bn, nt=nt)
-        in_specs.insert(1, pl.BlockSpec((1, 1),
-                                        lambda j, i, t, rows, cols: (i, 0)))
+        in_specs.insert(1, walk.stream_spec((1, 1)))
         operands.insert(3, scales.reshape(nnzb, 1).astype(jnp.float32))
     return pl.pallas_call(
         kern,
@@ -129,8 +127,7 @@ def spmm_bcsr(block_rows: jax.Array, block_cols: jax.Array, blocks: jax.Array,
             num_scalar_prefetch=2,  # block_rows, block_cols
             grid=grid,
             in_specs=in_specs,
-            out_specs=pl.BlockSpec(
-                (bm, nt * bn), lambda j, i, t, rows, cols: (rows[i], j)),
+            out_specs=walk.row_spec((bm, nt * bn), lambda o, row, t: (row, o[0])),
         ),
         out_shape=jax.ShapeDtypeStruct((n_block_rows * bm, N), out_dtype),
         interpret=interpret,

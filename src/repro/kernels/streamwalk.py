@@ -1,0 +1,94 @@
+"""Shared BCSR stream-walk grid/BlockSpec construction (the SU discipline).
+
+Both sparse clients -- ``spmm_bcsr`` (MoE dispatch) and
+``flash_attention_sparse`` (block-sparse attention) -- walk a scalar-prefetched
+sorted block-index stream with one grid dimension, keep an accumulator
+VMEM-resident across each block-row's run of stream entries, and let the
+Pallas pipeline double-buffer the next indexed tile while compute consumes
+the current one.  This module is that shape, factored once:
+
+* the grid layout ``(*outer, nnzb, *inner)`` with the stream walk at a fixed
+  axis,
+* the three BlockSpec families every stream client needs --
+  ``stream_spec`` (affine walk of the flattened block array),
+  ``indexed_spec`` (SU indirection: a prefetched index steers the DMA),
+  ``row_spec`` (output revisiting keyed on the sorted row stream),
+* the row-run predicates ``row_start`` / ``row_end`` that drive first-visit
+  init and last-visit finalize of the resident accumulator.
+
+Index-map convention (Pallas): maps receive ``(*grid_indices,
+*scalar_prefetch_refs)``.  ``StreamWalk`` splits that argument list by its
+declared geometry so client ``coords`` callbacks only see
+``(outer_indices, index_value, inner_indices)``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+class StreamWalk:
+    """Grid/BlockSpec builder for a sorted block-index stream walk.
+
+    Args:
+      outer: number of grid dims before the stream axis (e.g. spmm's
+        N-supertile ``j`` -> 1; attention's ``(b, h)`` -> 2).
+      inner: number of grid dims after the stream axis (e.g. spmm's
+        resident-subtile ``t`` -> 1).
+    """
+
+    def __init__(self, *, outer: int, inner: int = 0):
+        assert outer >= 0 and inner >= 0
+        self.outer = outer
+        self.inner = inner
+
+    def grid(self, outer_dims: tuple, nnzb: int, inner_dims: tuple = ()):
+        assert len(outer_dims) == self.outer and len(inner_dims) == self.inner
+        return (*outer_dims, nnzb, *inner_dims)
+
+    def _split(self, args):
+        n_grid = self.outer + 1 + self.inner
+        grid, scalars = args[:n_grid], args[n_grid:]
+        return (grid[:self.outer], grid[self.outer],
+                grid[self.outer + 1:], scalars)
+
+    def stream_spec(self, block_shape: tuple) -> pl.BlockSpec:
+        """Affine walk of a flattened per-entry array: block ``i`` at stream
+        position ``i``, constant across outer/inner dims (one fetch per
+        stream position)."""
+        def imap(*args):
+            _, i, _, _ = self._split(args)
+            return (i,) + (0,) * (len(block_shape) - 1)
+        return pl.BlockSpec(block_shape, imap)
+
+    def indexed_spec(self, block_shape: tuple, coords,
+                     stream_arg: int = 1) -> pl.BlockSpec:
+        """SU indirection: scalar-prefetch operand ``stream_arg`` (default:
+        the column stream, by the (rows, cols, ...) prefetch convention) is
+        read at the walk position and handed to ``coords(outer, value,
+        inner)`` to steer the DMA."""
+        def imap(*args):
+            outer, i, inner, scalars = self._split(args)
+            return coords(outer, scalars[stream_arg][i], inner)
+        return pl.BlockSpec(block_shape, imap)
+
+    def row_spec(self, block_shape: tuple, coords,
+                 stream_arg: int = 0) -> pl.BlockSpec:
+        """Output spec keyed on the sorted row stream: the block index is
+        non-decreasing across the walk, so Pallas keeps the accumulator tile
+        resident until the row changes."""
+        return self.indexed_spec(block_shape, coords, stream_arg=stream_arg)
+
+
+def row_start(rows_ref, i):
+    """True at the first stream entry of each block-row run (drives the
+    ``pl.when`` first-visit zeroing of the resident accumulator)."""
+    prev = rows_ref[jnp.maximum(i - 1, 0)]
+    return (i == 0) | (rows_ref[i] != prev)
+
+
+def row_end(rows_ref, i, nnzb: int):
+    """True at the last stream entry of each block-row run (drives the
+    last-visit finalize/write-back)."""
+    nxt = rows_ref[jnp.minimum(i + 1, nnzb - 1)]
+    return (i == nnzb - 1) | (rows_ref[i] != nxt)

@@ -129,6 +129,16 @@ _TABLE: Dict[Tuple[str, str, str], Dict[str, Any]] = {
     ("flash", "f32", "cpu"): {"bq": 128, "bk": 128},
     ("flash", "bf16", "cpu"): {"bq": 128, "bk": 128},
     ("flash", "fp8", "cpu"): {"bq": 128, "bk": 128},
+    # Block-sparse flash (BlockMask stream walk): narrower KV tiles than the
+    # dense rows -- bk is also the mask's pattern resolution, so a narrower
+    # tile walks fewer dead (q, k) pairs at the window/strided edges; sweeps
+    # may register per-pattern overrides under "patterns": {name: {bq, bk}}.
+    ("flash_sparse", "f32", "tpu"): {"bq": 128, "bk": 128},
+    ("flash_sparse", "bf16", "tpu"): {"bq": 128, "bk": 256},
+    ("flash_sparse", "fp8", "tpu"): {"bq": 128, "bk": 256},
+    ("flash_sparse", "f32", "cpu"): {"bq": 128, "bk": 128},
+    ("flash_sparse", "bf16", "cpu"): {"bq": 128, "bk": 128},
+    ("flash_sparse", "fp8", "cpu"): {"bq": 128, "bk": 128},
     # Stencil: per-ndim halo tiles; minor dim pinned to the 128 lane width.
     ("stencil2d", "f32", "tpu"): {"tile": (256, 256)},
     ("stencil2d", "bf16", "tpu"): {"tile": (256, 512)},
@@ -271,6 +281,28 @@ def flash_tiles(sq: int, skv: int, d: int, dtype=jnp.float32
     return bq, bk
 
 
+def flash_sparse_tiles(sq: int, skv: int, d: int, dtype=jnp.float32, *,
+                       pattern: str | None = None) -> Tuple[int, int]:
+    """(bq, bk) for the block-sparse flash kernel.  The table row may carry
+    per-pattern overrides (``"patterns": {"window": {"bq", "bk"}, ...}``,
+    registered by ``benchmarks/sweep_tiles.py``); shape/VMEM clamping matches
+    :func:`flash_tiles`."""
+    row = _row("flash_sparse", dtype)
+    if not row:  # missing fallback row -> share the dense flash defaults
+        row = _row("flash", dtype)
+    params = dict(row)
+    if pattern is not None:
+        params.update(row.get("patterns", {}).get(pattern, {}))
+    bq, bk = int(params["bq"]), int(params["bk"])
+    bq = min(bq, -(-max(sq, 1) // SUBLANE) * SUBLANE)
+    bk = min(bk, -(-max(skv, 1) // SUBLANE) * SUBLANE)
+    eb = _dtype_bytes(dtype)
+    while bk > LANE and (4 * bk * d * eb + bq * d * 4
+                         + 2 * bq * d * eb) > VMEM_BUDGET:
+        bk //= 2
+    return bq, bk
+
+
 def stencil_tile(interior: Tuple[int, ...], dtype=jnp.float32) -> Tuple[int, ...]:
     """Halo-tile for the 2-D/3-D stencil kernels (minor dim lane-aligned)."""
     ndim = len(interior)
@@ -303,6 +335,12 @@ def lookup(op: str, *, dtype=jnp.float32, **shape) -> Dict[str, Any]:
     if op == "flash":
         bq, bk = flash_tiles(shape.get("sq", LANE), shape.get("skv", LANE),
                              shape.get("d", LANE), dtype)
+        return {"bq": bq, "bk": bk}
+    if op == "flash_sparse":
+        bq, bk = flash_sparse_tiles(shape.get("sq", LANE),
+                                    shape.get("skv", LANE),
+                                    shape.get("d", LANE), dtype,
+                                    pattern=shape.get("pattern"))
         return {"bq": bq, "bk": bk}
     if op == "stencil":
         return {"tile": stencil_tile(shape["interior"], dtype)}

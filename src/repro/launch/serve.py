@@ -76,7 +76,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke
+from repro.core.masks import AttnMaskSpec
 from repro.kernels import engine
+from repro.kernels.flash_attention import ops as flash_ops
 from repro.models import model as M
 from repro.models import moe
 from repro.parallel import context as pctx
@@ -149,10 +151,15 @@ class _ServeBase:
                  two_phase: Optional[bool] = None, temperature: float = 0.0,
                  sample_seed: int = 3, pipeline_depth: int = 0,
                  quantize_experts: Optional[str] = None,
-                 kv_quant: Optional[str] = None):
+                 kv_quant: Optional[str] = None,
+                 attn_mask: Optional[AttnMaskSpec] = None):
         self.params, self.cfg = params, cfg
         self.quantize_experts = quantize_experts
         self.kv_quant = kv_quant
+        self.attn_mask = attn_mask
+        # baseline for the attention-fallback counter surfaced in
+        # summary()["timing"]: only fallbacks observed by THIS driver count
+        self._fallback_base = flash_ops.fallback_count()
         if quantize_experts:
             # opt-in narrow expert FFN weights: one-time host quantization,
             # QuantTensor leaves then flow through every execute path
@@ -271,6 +278,7 @@ class _ServeBase:
             if ss:
                 out[phase] = {"seconds": sum(s.seconds for s in ss),
                               "calls": len(ss)}
+        fallbacks = flash_ops.fallback_count() - self._fallback_base
         routes = [s for s in self.stats if s.phase == "route"]
         execs = [s for s in self.stats if s.phase == "execute"]
         if routes or execs:
@@ -291,7 +299,12 @@ class _ServeBase:
                 "route_hidden_ms": hidden_s * 1e3,
                 "route_hidden_frac": (hidden_s / route_s
                                       if route_s > 0 else 0.0),
+                "attention_ref_fallbacks": fallbacks,
             }
+        elif fallbacks:
+            # non-MoE (no route/execute stats) but the flash kernel silently
+            # fell back to the jnp reference: still surface the count
+            out["timing"] = {"attention_ref_fallbacks": fallbacks}
         if self.two_phase:
             streams = [s for s in routes if "nnzb_stream" in s.extra]
             if streams:
@@ -340,12 +353,13 @@ class ServeLoop(_ServeBase):
                  temperature: float = 0.0, sample_seed: int = 3,
                  pipeline_depth: int = 0,
                  quantize_experts: Optional[str] = None,
-                 kv_quant: Optional[str] = None):
+                 kv_quant: Optional[str] = None,
+                 attn_mask: Optional[AttnMaskSpec] = None):
         super().__init__(params, cfg, dispatch=dispatch, two_phase=two_phase,
                          temperature=temperature, sample_seed=sample_seed,
                          pipeline_depth=pipeline_depth,
                          quantize_experts=quantize_experts,
-                         kv_quant=kv_quant)
+                         kv_quant=kv_quant, attn_mask=attn_mask)
         self.max_seq = max_seq
         self._decode_fused = jax.jit(
             lambda p, c, pos, tok: M.decode_step(p, cfg, c, pos, tok))
@@ -381,13 +395,14 @@ class ServeLoop(_ServeBase):
                 self.params, prompts, self.cfg, max_seq=self.max_seq,
                 embeddings=embeddings, moe_fn=self._moe_two_phase,
                 route_ahead=self.pipeline_depth > 0,
-                kv_quant=self.kv_quant)
+                kv_quant=self.kv_quant, attn_mask=self.attn_mask)
         else:
             with self._dispatch_ctx():
                 logits, cache, pos = M.prefill(self.params, prompts, self.cfg,
                                                max_seq=self.max_seq,
                                                embeddings=embeddings,
-                                               kv_quant=self.kv_quant)
+                                               kv_quant=self.kv_quant,
+                                               attn_mask=self.attn_mask)
         logits, cache = jax.block_until_ready((logits, cache))
         self._pipe.drain()   # prefill executes all completed with logits
         self.stats.append(StepStat(
@@ -493,6 +508,7 @@ class ServeLoop(_ServeBase):
         ``run()`` after the first irreproducible."""
         self.stats.clear()
         self._exec_keys.clear()
+        self._fallback_base = flash_ops.fallback_count()
         self._pipe.drain()
         self._sample_key = (jax.random.PRNGKey(self._sample_seed)
                             if sample_key is None else sample_key)
@@ -589,12 +605,13 @@ class ServeScheduler(_ServeBase):
                  batch_min_bucket: int = 1, cache_dtype=jnp.bfloat16,
                  pipeline_depth: int = 0,
                  quantize_experts: Optional[str] = None,
-                 kv_quant: Optional[str] = None):
+                 kv_quant: Optional[str] = None,
+                 attn_mask: Optional[AttnMaskSpec] = None):
         super().__init__(params, cfg, dispatch=dispatch, two_phase=two_phase,
                          temperature=temperature, sample_seed=sample_seed,
                          pipeline_depth=pipeline_depth,
                          quantize_experts=quantize_experts,
-                         kv_quant=kv_quant)
+                         kv_quant=kv_quant, attn_mask=attn_mask)
         self.max_seq = max_seq
         self.batch_min_bucket = batch_min_bucket
         # allocate the slot pool at its own bucket so every step bucket,
@@ -672,12 +689,13 @@ class ServeScheduler(_ServeBase):
                 self.params, prompts, self.cfg, max_seq=self.max_seq,
                 cache_dtype=self.cache_dtype, moe_fn=self._moe_two_phase,
                 route_ahead=self.pipeline_depth > 0,
-                kv_quant=self.kv_quant)
+                kv_quant=self.kv_quant, attn_mask=self.attn_mask)
         else:
             with self._dispatch_ctx():
                 logits, cache1, pos = M.prefill(
                     self.params, prompts, self.cfg, max_seq=self.max_seq,
-                    cache_dtype=self.cache_dtype, kv_quant=self.kv_quant)
+                    cache_dtype=self.cache_dtype, kv_quant=self.kv_quant,
+                    attn_mask=self.attn_mask)
         logits, cache1 = jax.block_until_ready((logits, cache1))
         self._pipe.drain()   # prefill executes all completed with logits
         dt = time.monotonic() - t0
@@ -884,6 +902,17 @@ def main():
                     choices=["fp8_e4m3", "fp8_e5m2", "int8"],
                     help="store full-context KV caches as narrow values + "
                          "per-position f32 scales")
+    ap.add_argument("--attn-mask", default="none",
+                    choices=["none", "sliding", "local_global", "strided"],
+                    help="route prefill attention through the block-sparse "
+                         "stream walk: 'sliding' = local layers only (each "
+                         "layer's own window), others additionally impose "
+                         "the named long-context pattern on full-attention "
+                         "layers")
+    ap.add_argument("--attn-mask-impl", default="sparse",
+                    choices=["sparse", "dense", "ref"],
+                    help="masked-attention implementation (dense/ref are "
+                         "the parity baselines)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -894,6 +923,11 @@ def main():
 
     dispatch = None if args.dispatch == "config" else args.dispatch
     two_phase = None if args.two_phase == "auto" else args.two_phase == "on"
+    attn_mask = None
+    if args.attn_mask != "none":
+        pattern = None if args.attn_mask == "sliding" else args.attn_mask
+        attn_mask = AttnMaskSpec(local=True, pattern=pattern,
+                                 impl=args.attn_mask_impl)
 
     if args.continuous:
         rng = np.random.default_rng(0)
@@ -903,7 +937,7 @@ def main():
             temperature=args.temperature,
             pipeline_depth=args.pipeline_depth,
             quantize_experts=args.quantize_experts,
-            kv_quant=args.kv_quant)
+            kv_quant=args.kv_quant, attn_mask=attn_mask)
         for _ in range(args.requests):
             plen = int(rng.integers(max(2, args.prompt_len // 2),
                                     args.prompt_len + 1))
@@ -944,7 +978,8 @@ def main():
     loop = ServeLoop(
         params, cfg, max_seq=max_seq, dispatch=dispatch, two_phase=two_phase,
         temperature=args.temperature, pipeline_depth=args.pipeline_depth,
-        quantize_experts=args.quantize_experts, kv_quant=args.kv_quant)
+        quantize_experts=args.quantize_experts, kv_quant=args.kv_quant,
+        attn_mask=attn_mask)
     gen = loop.run(prompts, args.gen, embeddings=emb)
     s = loop.summary()
 

@@ -17,6 +17,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.masks import NEG_INF, AttnMaskSpec
 from repro.models.config import ArchConfig
 
 
@@ -200,7 +201,7 @@ def chunked_attention(q, k, v, *, causal=True, window=None, chunk=1024):
             mask &= q_pos >= k_pos
         if window is not None:
             mask &= (q_pos - k_pos) < window
-        s = jnp.where(mask[None, None, None], s, -1e30)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
         alpha = jnp.exp(m - m_new)
@@ -210,7 +211,7 @@ def chunked_attention(q, k, v, *, causal=True, window=None, chunk=1024):
             preferred_element_type=jnp.float32)
         return (m_new, l, acc, ci + 1), None
 
-    init = (jnp.full((B, Hkv, g, Sq, 1), -1e30, jnp.float32),
+    init = (jnp.full((B, Hkv, g, Sq, 1), NEG_INF, jnp.float32),
             jnp.zeros((B, Hkv, g, Sq, 1), jnp.float32),
             jnp.zeros((B, Hkv, g, Sq, hd), jnp.float32),
             jnp.asarray(0, jnp.int32))
@@ -222,9 +223,34 @@ def chunked_attention(q, k, v, *, causal=True, window=None, chunk=1024):
     return out.reshape(B, Hq, Sq, hd).astype(q.dtype)
 
 
+def _masked_prefill_attention(q, k, v, spec: AttnMaskSpec, window):
+    """Prefill through the block-sparse stream walk when the AttnMaskSpec
+    applies to this layer (sliding-window layers via ``spec.local``,
+    full-attention layers via ``spec.pattern``); None -> caller falls back
+    to the dense impl dispatch.  Mask construction is host numpy on static
+    shapes, so it runs once per trace and the lowered stream becomes a
+    compile-time operand (recompiles keyed on pattern signature x bucket).
+    """
+    from repro.kernels import tuning
+    from repro.kernels.flash_attention import ops as fops
+    S, D = q.shape[2], q.shape[3]
+    pattern = "window" if window is not None else spec.pattern
+    bq, bk = spec.bq, spec.bk
+    if bq is None or bk is None:
+        tbq, tbk = tuning.flash_sparse_tiles(S, S, D, q.dtype,
+                                             pattern=pattern)
+        bq, bk = bq or tbq, bk or tbk
+    mask = spec.build(S, S, layer_window=window, bq=bq, bk=bk)
+    if mask is None:
+        return None
+    return fops.attention(q, k, v, mask=mask, mask_impl=spec.impl,
+                          interpret=not tuning.on_tpu())
+
+
 def apply_attention(p, x, cfg: ArchConfig, *, window=None, positions=None,
                     impl: str = "chunked", cache=None, cache_len=None,
-                    collect_kv: int = 0, kv_quant: Optional[str] = None):
+                    collect_kv: int = 0, kv_quant: Optional[str] = None,
+                    attn_mask: Optional[AttnMaskSpec] = None):
     """Self-attention (train/prefill) or one-step decode when ``cache`` given.
 
     cache: dict(k=(B,Hkv,S,hd), v=...) -- updated functionally; ``cache_len``
@@ -243,13 +269,21 @@ def apply_attention(p, x, cfg: ArchConfig, *, window=None, positions=None,
     wide.  Decode auto-detects a quantized cache by its ``k_scale`` leaf:
     new keys/values are quantized per position before the scatter and the
     whole cache is dequantized to the query dtype before attention.
+    ``attn_mask``: an ``AttnMaskSpec`` routes prefill through the
+    block-sparse stream-walk kernel (sliding-window layers and/or an opt-in
+    long-context pattern); decode is untouched.
     Returns (out, new_cache).
     """
     B, S, d = x.shape
     if cache is None:
         positions = positions if positions is not None else jnp.arange(S)
         q, k, v = _qkv(p, x, cfg, positions)
-        if impl == "kernel":
+        out = None
+        if attn_mask is not None:
+            out = _masked_prefill_attention(q, k, v, attn_mask, window)
+        if out is not None:
+            pass
+        elif impl == "kernel":
             from repro.kernels.flash_attention.ops import attention as flash
             out = flash(q, k, v, causal=True, window=window)
         elif impl == "kernel_sharded":

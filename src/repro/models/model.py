@@ -18,6 +18,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.masks import NEG_INF, AttnMaskSpec
 from repro.core.precision import policy as precision_policy
 from repro.models.config import ArchConfig
 from repro.models import layers as L
@@ -85,21 +86,23 @@ def _window_for(kind: str, cfg: ArchConfig) -> Optional[int]:
 
 def apply_block(kind: str, p: Params, x, cfg: ArchConfig, *, impl="chunked",
                 cache=None, pos=None, collect_kv: int = 0, moe_fn=None,
-                kv_quant: Optional[str] = None):
+                kv_quant: Optional[str] = None, attn_mask=None):
     """One sub-layer. Returns (x, new_cache). ``collect_kv`` > 0 makes the
     prefill path emit a decode cache of that capacity.  ``moe_fn`` overrides
     ``moe.apply_moe`` for attn+moe blocks (same signature/returns) -- the
     two-phase serving loop injects its route-then-execute stage here.
     ``kv_quant`` (prefill only) collects full-context attention caches as
     per-position narrow values + f32 scales (see ``layers.apply_attention``);
-    decode detects a quantized cache by its scale leaves, no flag needed."""
+    decode detects a quantized cache by its scale leaves, no flag needed.
+    ``attn_mask`` (an ``AttnMaskSpec``, prefill only) routes attention
+    through the block-sparse stream walk."""
     if kind in ATTN_KINDS:
         h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
         attn_cache = cache.get("attn") if cache else None
         a, new_attn = L.apply_attention(
             p["attn"], h, cfg, window=_window_for(kind, cfg), impl=impl,
             cache=attn_cache, cache_len=pos, collect_kv=collect_kv,
-            kv_quant=kv_quant)
+            kv_quant=kv_quant, attn_mask=attn_mask)
         x = x + a
         h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
         moe_counts = None
@@ -244,7 +247,7 @@ def loss_fn(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
         logits = logits.astype(jnp.float32)
         if cfg.padded_vocab != cfg.vocab_size:  # mask pad ids out of the CE
             pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
-            logits = jnp.where(pad_mask, -1e30, logits)
+            logits = jnp.where(pad_mask, NEG_INF, logits)
         lp = jax.nn.log_softmax(logits, axis=-1)
         return -jnp.take_along_axis(lp, tgt_blk[..., None], axis=-1)[..., 0]
 
@@ -285,11 +288,12 @@ def _cache_to_dtype(cache, cd, cache_dtype):
 def prefill(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
             max_seq: int, embeddings: Optional[jax.Array] = None,
             impl: str = "chunked", cache_dtype=jnp.bfloat16,
-            kv_quant: Optional[str] = None):
+            kv_quant: Optional[str] = None, attn_mask=None):
     """Serving prefill: forward over the prompt, emitting (last_logits,
     decode cache filled to ``tokens`` length, next position).  ``kv_quant``
     stores full-context KV caches as per-position narrow values + f32
-    scales (local ring buffers stay wide)."""
+    scales (local ring buffers stay wide).  ``attn_mask`` (AttnMaskSpec)
+    routes attention through the block-sparse stream walk."""
     pol = precision_policy(cfg.policy)
     cd = pol.compute_dtype
     x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
@@ -302,7 +306,8 @@ def prefill(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
     if "prologue" in params:
         def pro_body(x, p_slice):
             y, c = apply_block(cfg.block_unit[0], p_slice, x, cfg, impl=impl,
-                               collect_kv=max_seq, kv_quant=kv_quant)
+                               collect_kv=max_seq, kv_quant=kv_quant,
+                               attn_mask=attn_mask)
             return y, c
         x, pro_cache = jax.lax.scan(pro_body, x, params["prologue"])
         cache["prologue"] = pro_cache
@@ -313,12 +318,14 @@ def prefill(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
         y = x
         for slot, kind in enumerate(cfg.block_unit):
             y, c = apply_block(kind, p_slots[slot], y, cfg, impl=impl,
-                               collect_kv=max_seq, kv_quant=kv_quant)
+                               collect_kv=max_seq, kv_quant=kv_quant,
+                               attn_mask=attn_mask)
             slot_caches.append(c)
         if cfg.shared_attn_every:
             fire = (step_idx % cfg.shared_attn_every) == (cfg.shared_attn_every - 1)
             y2, c2 = apply_block("shared_attn", shared_p, y, cfg, impl=impl,
-                                 collect_kv=max_seq, kv_quant=kv_quant)
+                                 collect_kv=max_seq, kv_quant=kv_quant,
+                                 attn_mask=attn_mask)
             y = jnp.where(fire, y2, y)
             slot_caches.append(c2)
         return y, tuple(slot_caches)
@@ -454,12 +461,15 @@ def _decode_block_attn(kind, p, x, cfg, cache, pos, dtype, moe_fn=None):
     return apply_block(kind, p, x, cfg, cache=cache, pos=pos, moe_fn=moe_fn)
 
 
-def cache_capacity(cache) -> Optional[int]:
+def cache_capacity(cache, *, ring_window: Optional[int] = None) -> Optional[int]:
     """Static sequence capacity of a decode cache: the minimum cache length
     over its full (non-ring) attention slots, or None for cache-free /
-    attention-free stacks.  Ring buffers (``attn_local``) are excluded --
-    they wrap by construction and never overflow.  This is what callers must
-    host-check ``pos`` against before a decode write: the cache update is a
+    attention-free stacks.  Ring buffers (``attn_local``) wrap by
+    construction and never overflow, so when ``ring_window`` is given
+    (``cfg.local_window``) leaves of exactly that length are excluded --
+    decode identifies rings the same way (``Lc == window`` in
+    ``_decode_block_attn``).  This is what callers must host-check ``pos``
+    against before a decode write: the cache update is a
     ``dynamic_update_slice`` / scatter, and XLA *clamps / drops*
     out-of-bounds writes instead of failing, which silently corrupts the
     last cache slot (see ``ServeLoop.decode_step``)."""
@@ -478,17 +488,23 @@ def cache_capacity(cache) -> Optional[int]:
                 visit(v)
 
     visit(cache)
+    if ring_window is not None:
+        caps = [c for c in caps if c != ring_window]
     return min(caps) if caps else None
 
 
-def check_cache_fits(cache, pos, *, who: str = "decode_step"):
+def check_cache_fits(cache, pos, *, who: str = "decode_step",
+                     cfg: Optional[ArchConfig] = None):
     """Raise (host-side) when a concrete ``pos`` would write past the decode
     cache capacity.  ``pos`` may be a scalar or a per-row vector; traced
     positions are the caller's responsibility (the fused jit path cannot
-    host-check -- ``ServeLoop`` checks before dispatching)."""
+    host-check -- ``ServeLoop`` checks before dispatching).  Pass ``cfg`` so
+    local-layer ring buffers (capacity = ``cfg.local_window``, wrap forever)
+    are not mistaken for the overflow bound."""
     if isinstance(pos, jax.core.Tracer):
         return
-    cap = cache_capacity(cache)
+    ring = cfg.local_window if cfg is not None else None
+    cap = cache_capacity(cache, ring_window=ring)
     if cap is None:
         return
     import numpy as _np
@@ -617,24 +633,29 @@ def _layer_decode_attn_route_jit(cfg: ArchConfig, capacity: int):
 
 @functools.lru_cache(maxsize=None)
 def _layer_prefill_jit(cfg: ArchConfig, kind: str, collect_kv: int,
-                       impl: str, kv_quant: Optional[str] = None):
-    """Whole-layer prefill step (cache-collecting forward)."""
+                       impl: str, kv_quant: Optional[str] = None,
+                       attn_mask: Optional[AttnMaskSpec] = None):
+    """Whole-layer prefill step (cache-collecting forward).  ``attn_mask``
+    is a frozen (hashable) AttnMaskSpec so mask-routed prefills share this
+    cache; the concrete BlockMask is built at trace time from the static
+    sequence length."""
     def fn(p, x):
         return apply_block(kind, p, x, cfg, impl=impl, collect_kv=collect_kv,
-                           kv_quant=kv_quant)
+                           kv_quant=kv_quant, attn_mask=attn_mask)
     return jax.jit(fn)
 
 
 @functools.lru_cache(maxsize=None)
 def _layer_prefill_attn_head_jit(cfg: ArchConfig, kind: str, collect_kv: int,
-                                 impl: str, kv_quant: Optional[str] = None):
+                                 impl: str, kv_quant: Optional[str] = None,
+                                 attn_mask: Optional[AttnMaskSpec] = None):
     """Prefill attention half of an attn+moe layer (up to the MoE yield)."""
     def fn(p, x):
         h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
         a, new_attn = L.apply_attention(
             p["attn"], h, cfg, window=_window_for(kind, cfg), impl=impl,
             cache=None, cache_len=None, collect_kv=collect_kv,
-            kv_quant=kv_quant)
+            kv_quant=kv_quant, attn_mask=attn_mask)
         x = x + a
         h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
         return x, h, new_attn
@@ -644,7 +665,8 @@ def _layer_prefill_attn_head_jit(cfg: ArchConfig, kind: str, collect_kv: int,
 @functools.lru_cache(maxsize=None)
 def _layer_prefill_attn_route_jit(cfg: ArchConfig, kind: str,
                                   collect_kv: int, impl: str, capacity: int,
-                                  kv_quant: Optional[str] = None):
+                                  kv_quant: Optional[str] = None,
+                                  attn_mask: Optional[AttnMaskSpec] = None):
     """Prefill twin of :func:`_layer_decode_attn_route_jit`: attention half
     fused with MoE route phase 1 for a fresh sequence (zero occupancy,
     position 0); ``capacity`` is static per prompt length."""
@@ -653,7 +675,7 @@ def _layer_prefill_attn_route_jit(cfg: ArchConfig, kind: str,
         a, new_attn = L.apply_attention(
             p["attn"], h, cfg, window=_window_for(kind, cfg), impl=impl,
             cache=None, cache_len=None, collect_kv=collect_kv,
-            kv_quant=kv_quant)
+            kv_quant=kv_quant, attn_mask=attn_mask)
         x = x + a
         h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
         ph1 = moe.route_phase1(p["ffn"]["router"], h, cfg, None, 0, capacity)
@@ -723,7 +745,7 @@ def decode_step_layered(params: Params, cfg: ArchConfig, cache, pos,
     host only ever fetches the small slot stream, never the hidden state.
     The computed values are identical to ``route_ahead=False``.
     """
-    check_cache_fits(cache, pos, who="decode_step_layered")
+    check_cache_fits(cache, pos, who="decode_step_layered", cfg=cfg)
     pol = precision_policy(cfg.policy)
     cd = pol.compute_dtype
     x = jnp.take(params["embed"], tokens_1, axis=0).astype(cd)
@@ -791,7 +813,8 @@ def prefill_layered(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
                     max_seq: int, embeddings: Optional[jax.Array] = None,
                     impl: str = "chunked", cache_dtype=jnp.bfloat16,
                     moe_fn=None, route_ahead: bool = False,
-                    kv_quant: Optional[str] = None):
+                    kv_quant: Optional[str] = None,
+                    attn_mask: Optional[AttnMaskSpec] = None):
     """Serving prefill, layer by layer: same function as :func:`prefill`
     but with the repeat loop unrolled in Python so a serving loop can
     interleave host work (two-phase MoE routing) between layers.  This is
@@ -820,17 +843,19 @@ def prefill_layered(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
         if kind == "attn+moe" and moe_fn is not None:
             if route_ahead:
                 x, h, new_attn, ph1 = _layer_prefill_attn_route_jit(
-                    cfg, kind, max_seq, impl, route_cap, kv_quant)(p_i, x)
+                    cfg, kind, max_seq, impl, route_cap, kv_quant,
+                    attn_mask)(p_i, x)
                 f, moe_counts = moe_fn(p_i["ffn"], h, cfg, counts=None,
                                        pos=None,
                                        phase1=moe.Phase1(*ph1, route_cap))
             else:
                 x, h, new_attn = _layer_prefill_attn_head_jit(
-                    cfg, kind, max_seq, impl, kv_quant)(p_i, x)
+                    cfg, kind, max_seq, impl, kv_quant, attn_mask)(p_i, x)
                 f, moe_counts = moe_fn(p_i["ffn"], h, cfg, counts=None,
                                        pos=None)
             return x + f, {"attn": new_attn, "moe": moe_counts}
-        return _layer_prefill_jit(cfg, kind, max_seq, impl, kv_quant)(p_i, x)
+        return _layer_prefill_jit(cfg, kind, max_seq, impl, kv_quant,
+                                  attn_mask)(p_i, x)
 
     if "prologue" in params:
         pro = []
@@ -851,7 +876,7 @@ def prefill_layered(params: Params, tokens: jax.Array, cfg: ArchConfig, *,
             # residual only advances on fire steps
             fire = (i % cfg.shared_attn_every) == (cfg.shared_attn_every - 1)
             y2, c2 = _layer_prefill_jit(cfg, "shared_attn", max_seq,
-                                        impl, kv_quant)(shared_p, x)
+                                        impl, kv_quant, attn_mask)(shared_p, x)
             if fire:
                 x = y2
             new_slots.append(c2)

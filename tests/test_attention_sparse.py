@@ -1,0 +1,359 @@
+"""Block-sparse attention on the BCSR stream walk.
+
+Three layers of contract (see tests/README.md "Block-sparse attention
+contract"):
+
+1. **Pattern -> stream lowering** (``core.masks``): ``BlockMask.lower()``
+   reconstructs exactly the tiles ``dense_mask()`` says are visible, every
+   q-tile row is present, the stream is (row, col)-sorted, and bucket
+   padding is dead entries at the last live coordinate.
+2. **Kernel parity** (``kernels.flash_attention``): the sparse walk is
+   ``array_equal``-identical to the masked dense grid for every pattern
+   (both call the same ``_tile_update``), allclose to the jnp oracle, and
+   bit-identical to the *pre-existing* causal/window kernel where the
+   patterns coincide.
+3. **System parity** (``engine`` / serving): the sharded wrapper matches
+   single-device bit-for-bit (absolute-position refinement under nonzero
+   ``q_offset``), serving with ``attn_mask=`` is token-identical between
+   the sparse and dense-masked implementations on both dispatch backends,
+   and recompiles stay bounded by (pattern signature x bucket).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks
+from repro.core.masks import AttnMaskSpec, BlockMask
+from repro.kernels import engine
+from repro.kernels.flash_attention import kernel as fk
+from repro.kernels.flash_attention import ops as fops
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models.config import ArchConfig
+from repro.models import model as M
+from repro.launch.serve import ServeLoop, ServeScheduler
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(B=1, Hq=2, Hkv=2, Sq=64, Skv=64, D=16, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Hq, Sq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, Skv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, Skv, D), dtype)
+    return q, k, v
+
+
+def _patterns(sq, skv, bq, bk):
+    """The pattern zoo every parity test walks."""
+    local = BlockMask.sliding_window(sq, skv, 3 * bk, bq=bq, bk=bk)
+    return {
+        "causal": BlockMask.causal(sq, skv, bq=bq, bk=bk),
+        "window": BlockMask.sliding_window(sq, skv, 2 * bk, bq=bq, bk=bk),
+        "strided": BlockMask.strided(sq, skv, 2, bq=bq, bk=bk),
+        "global": BlockMask.global_cols(sq, skv, 1, bq=bq, bk=bk),
+        "local|global": local | BlockMask.global_cols(sq, skv, 1,
+                                                      bq=bq, bk=bk),
+        "strided&causal": (BlockMask.strided(sq, skv, 2, bq=bq, bk=bk)
+                           & BlockMask.causal(sq, skv, bq=bq, bk=bk)),
+    }
+
+
+PATTERN_NAMES = list(_patterns(64, 64, 16, 16))
+
+
+# =========================================================== 1. lowering ==
+@pytest.mark.parametrize("name", PATTERN_NAMES)
+def test_lowering_matches_dense_oracle(name):
+    """Rebuilding tile visibility from the lowered stream reproduces the
+    tile_kinds map, and expanding the stream tile-by-tile reproduces the
+    dense boolean oracle."""
+    m = _patterns(64, 96, 16, 16)[name]
+    s = m.lower(bucket=False)
+    # sorted by (row, col), every row present
+    order = s.rows * (m.n_kv_tiles + 1) + s.cols
+    assert (np.diff(order) >= 0).all()
+    assert set(s.rows.tolist()) == set(range(m.n_q_tiles))
+    # live entries reconstruct tile_kinds exactly
+    rebuilt = np.full_like(m.tile_kinds, masks.KIND_DEAD)
+    live = s.kinds >= 0
+    rebuilt[s.rows[live], s.cols[live]] = s.kinds[live]
+    np.testing.assert_array_equal(rebuilt, np.where(
+        m.tile_kinds >= 0, m.tile_kinds, masks.KIND_DEAD))
+    # dense expansion of the stream == the oracle
+    dense = np.zeros((m.n_q_tiles * m.bq, m.n_kv_tiles * m.bk), bool)
+    q = np.arange(dense.shape[0])[:, None]
+    kpos = np.arange(dense.shape[1])[None, :]
+    for r, c, kind in zip(s.rows, s.cols, s.kinds):
+        if kind < 0:
+            continue
+        tile = np.ones((m.bq, m.bk), bool)
+        qq = q[r * m.bq:(r + 1) * m.bq, :1] + m.q_offset
+        kk = kpos[:1, c * m.bk:(c + 1) * m.bk]
+        if kind & masks.KIND_CAUSAL:
+            tile &= qq >= kk
+        if kind & masks.KIND_WINDOW:
+            tile &= (qq - kk) < m.window
+        dense[r * m.bq:(r + 1) * m.bq, c * m.bk:(c + 1) * m.bk] = tile
+    np.testing.assert_array_equal(dense[:m.sq, :m.skv], m.dense_mask())
+
+
+def test_lowering_bucket_padding():
+    m = BlockMask.sliding_window(64, 64, 32, bq=16, bk=16)
+    raw = m.lower(bucket=False)
+    b = m.lower(bucket=True)
+    assert b.capacity == masks.next_pow2(raw.capacity)
+    assert b.nnzb == raw.nnzb
+    # pads repeat the last live coordinate with KIND_DEAD
+    assert (b.kinds[raw.capacity:] == masks.KIND_DEAD).all()
+    assert (b.rows[raw.capacity:] == raw.rows[-1]).all()
+    assert (b.cols[raw.capacity:] == raw.cols[-1]).all()
+
+
+def test_compose_matches_elementwise():
+    """& / | compose like the dense boolean masks they lower to."""
+    sq = skv = 64
+    a = BlockMask.sliding_window(sq, skv, 32, bq=16, bk=16)
+    b = BlockMask.strided(sq, skv, 2, bq=16, bk=16)
+    g = BlockMask.global_cols(sq, skv, 1, bq=16, bk=16)
+    np.testing.assert_array_equal((a & b).dense_mask(),
+                                  a.dense_mask() & b.dense_mask())
+    np.testing.assert_array_equal((a | g).dense_mask(),
+                                  a.dense_mask() | g.dense_mask())
+    # union keeps the laxer refinement; intersection accumulates bits
+    assert (a | g).nnzb >= max(a.nnzb, g.nnzb)
+    assert (a & b).nnzb <= min(a.nnzb, b.nnzb)
+    d = a.density()
+    assert d["nnzb"] < d["dense_tiles"]          # the walk actually shrank
+    assert 0.0 < d["block_fill"] < 1.0
+
+
+def test_compose_window_mismatch_raises():
+    a = BlockMask.sliding_window(64, 64, 32, bq=16, bk=16)
+    b = BlockMask.sliding_window(64, 64, 16, bq=16, bk=16)
+    with pytest.raises(ValueError):
+        _ = a & b
+
+
+def test_from_dense_rounds_up_to_tiles():
+    """Arbitrary per-row block lists: sub-tile structure rounds UP, the
+    oracle reflects the rounded (block-granular) semantics."""
+    rng = np.random.default_rng(0)
+    dense = rng.random((52, 40)) < 0.2
+    m = BlockMask.from_dense(dense, bq=16, bk=16)
+    got = m.dense_mask()
+    assert got[dense].all()                      # nothing visible was lost
+    blk = got.reshape(-1)                        # block-granular: any -> all
+    tiles = m.tile_kinds >= 0
+    for r in range(m.n_q_tiles):
+        for c in range(m.n_kv_tiles):
+            sub = dense[r * 16:(r + 1) * 16, c * 16:(c + 1) * 16]
+            assert tiles[r, c] == sub.any()
+    del blk
+
+
+# ====================================================== 2. kernel parity ==
+@pytest.mark.parametrize("name", PATTERN_NAMES)
+def test_sparse_equals_masked_dense(name):
+    """The stream walk is bit-identical to the dense kind-map grid (same
+    _tile_update, same visit order per row) and allclose to the oracle."""
+    bq = bk = 16
+    m = _patterns(64, 96, bq, bk)[name]
+    q, k, v = _qkv(B=2, Hq=2, Hkv=2, Sq=64, Skv=96)
+    s = m.lower(bucket=True)
+    sparse = fk.flash_attention_sparse(
+        q, k, v, s.rows, s.cols, s.kinds, skv=96, window=m.window,
+        bq=bq, bk=bk, interpret=True)
+    dense = fk.flash_attention_masked(
+        q, k, v, m.tile_kinds, skv=96, window=m.window, interpret=True)
+    np.testing.assert_array_equal(np.asarray(sparse), np.asarray(dense))
+    ref = attention_ref(q, k, v, mask=m)
+    np.testing.assert_allclose(np.asarray(sparse), np.asarray(ref),
+                               atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("window", [None, 24])
+def test_sparse_equals_preexisting_kernel(window):
+    """Where the pattern is plain causal / sliding-window, the sparse walk
+    reproduces the untouched pre-existing flash kernel bit-for-bit."""
+    bq = bk = 16
+    q, k, v = _qkv(Sq=64, Skv=64)
+    m = BlockMask.full(64, 64, bq=bq, bk=bk, causal=True, window=window)
+    s = m.lower(bucket=True)
+    sparse = fk.flash_attention_sparse(
+        q, k, v, s.rows, s.cols, s.kinds, skv=64, window=window,
+        bq=bq, bk=bk, interpret=True)
+    plain = fk.flash_attention(q, k, v, causal=True, window=window,
+                               bq=bq, bk=bk, interpret=True)
+    np.testing.assert_array_equal(np.asarray(sparse), np.asarray(plain))
+
+
+def test_bucketed_stream_is_noop():
+    """Bucket padding (dead entries) changes nothing in the output."""
+    bq = bk = 16
+    m = BlockMask.sliding_window(64, 64, 32, bq=bq, bk=bk)
+    q, k, v = _qkv()
+    outs = []
+    for bucket in (False, True):
+        s = m.lower(bucket=bucket)
+        outs.append(np.asarray(fk.flash_attention_sparse(
+            q, k, v, s.rows, s.cols, s.kinds, skv=64, window=m.window,
+            bq=bq, bk=bk, interpret=True)))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_ragged_and_gqa_via_ops():
+    """ops.attention(mask=) pads ragged S to tiles; GQA heads share KV."""
+    Sq = Skv = 52                                # ragged: not a tile multiple
+    q, k, v = _qkv(B=2, Hq=4, Hkv=2, Sq=Sq, Skv=Skv)
+    m = BlockMask.sliding_window(Sq, Skv, 24, bq=16, bk=16)
+    sparse = fops.attention(q, k, v, mask=m, mask_impl="sparse",
+                            interpret=True)
+    dense = fops.attention(q, k, v, mask=m, mask_impl="dense",
+                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(sparse), np.asarray(dense))
+    ref = attention_ref(q, k, v, mask=m)
+    np.testing.assert_allclose(np.asarray(sparse), np.asarray(ref),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_q_offset_shard_equals_full_slice():
+    """A row-shard's sub-mask (nonzero q_offset) reproduces its slice of the
+    full computation exactly -- refinements compare absolute positions."""
+    bq = bk = 16
+    Sq = Skv = 64
+    q, k, v = _qkv(Sq=Sq, Skv=Skv)
+    m = BlockMask.sliding_window(Sq, Skv, 32, bq=bq, bk=bk)
+    s_full = m.lower(bucket=True)
+    full = np.asarray(fk.flash_attention_sparse(
+        q, k, v, s_full.rows, s_full.cols, s_full.kinds, skv=Skv,
+        window=m.window, bq=bq, bk=bk, interpret=True))
+    subs = m.shard_rows(2)
+    assert subs[1].q_offset == Sq // 2
+    s1 = subs[1].lower(bucket=True)
+    part = np.asarray(fk.flash_attention_sparse(
+        q[:, :, Sq // 2:], k, v, s1.rows, s1.cols, s1.kinds, skv=Skv,
+        window=m.window, bq=bq, bk=bk,
+        q_offset=subs[1].q_offset, interpret=True))
+    np.testing.assert_array_equal(part, full[:, :, Sq // 2:])
+
+
+@pytest.mark.parametrize("name", ["window", "causal", "local|global"])
+def test_sharded_wrapper_matches_single_device(name):
+    """engine.shard_attention_sparse on the 4-virtual-device CPU mesh is
+    bit-identical to the unsharded walk (per-shard streams at a common
+    bucket, per-shard absolute q_offset)."""
+    if jax.device_count() < 2:
+        pytest.skip("needs the multi-device CPU topology (conftest)")
+    bq = bk = 8
+    Sq = Skv = 64
+    m = _patterns(Sq, Skv, bq, bk)[name]
+    q, k, v = _qkv(B=1, Hq=2, Hkv=2, Sq=Sq, Skv=Skv, D=16)
+    single = fops.attention(q, k, v, mask=m, mask_impl="sparse",
+                            interpret=True)
+    sharded = engine.shard_attention_sparse(q, k, v, m, interpret=True)
+    np.testing.assert_array_equal(np.asarray(sharded), np.asarray(single))
+
+
+# ================================================= 3. fallback discipline ==
+def test_fallback_counter_and_error_knob():
+    q, k, v = _qkv(Sq=16, Skv=16)
+    fops.reset_fallbacks()
+    # explicit reference routing is counted
+    fops.attention(q, k, v, use_kernel=False)
+    assert fops.fallback_count() == 1
+    assert fops.fallback_reasons() == {"use_kernel=False": 1}
+    # shape-forced fallback: non-causal ragged KV needs pad masking
+    q2, k2, v2 = _qkv(Sq=16, Skv=13)
+    fops.attention(q2, k2, v2, causal=False, bq=8, bk=8)
+    assert fops.fallback_count() == 2
+    assert fops.fallback_reasons()["noncausal_kv_pad"] == 1
+    # fallback="error" turns both into hard failures
+    with pytest.raises(RuntimeError, match="fallback='error'"):
+        fops.attention(q, k, v, use_kernel=False, fallback="error")
+    with pytest.raises(RuntimeError, match="fallback='error'"):
+        fops.attention(q2, k2, v2, causal=False, bq=8, bk=8,
+                       fallback="error")
+    # the masked-kernel paths never touch the reference
+    before = fops.fallback_count()
+    m = BlockMask.causal(16, 16, bq=8, bk=8)
+    fops.attention(q, k, v, mask=m, interpret=True, fallback="error")
+    assert fops.fallback_count() == before
+    fops.reset_fallbacks()
+
+
+# ==================================================== 4. serving parity ==
+TINY_LOCAL = ArchConfig(
+    name="tiny-local", family="dense", d_model=32, n_heads=2, n_kv_heads=1,
+    d_ff=48, vocab_size=64,
+    block_unit=("attn_local", "attn_local", "attn_global"), n_repeats=2,
+    head_dim=16, local_window=8, policy="f32")
+
+TINY_MOE = ArchConfig(
+    name="tiny-moe-mask", family="moe", d_model=32, n_heads=2, n_kv_heads=1,
+    d_ff=48, vocab_size=64, block_unit=("attn_local", "attn+moe"),
+    n_repeats=2, head_dim=16, local_window=8, n_experts=4, top_k=1,
+    capacity_factor=1.0, moe_shared_expert=True, policy="f32")
+
+
+@pytest.mark.serve
+def test_serveloop_sparse_vs_dense_token_identical():
+    """Sliding-window prefill through the sparse walk generates exactly the
+    tokens of the dense-masked parity baseline (gemma3-style local stack)."""
+    params = M.init_params(KEY, TINY_LOCAL)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                 TINY_LOCAL.vocab_size)
+    toks = {}
+    for impl in ("sparse", "dense"):
+        spec = AttnMaskSpec(local=True, impl=impl, bq=8, bk=8)
+        loop = ServeLoop(params, TINY_LOCAL, max_seq=24, attn_mask=spec)
+        toks[impl] = loop.run(prompts, 8)
+    np.testing.assert_array_equal(toks["sparse"], toks["dense"])
+
+
+@pytest.mark.serve
+@pytest.mark.parametrize("dispatch", ["gather", "bcsr"])
+def test_scheduler_attn_mask_both_backends(dispatch):
+    """ServeScheduler with attn_mask= (local + long-context local_global
+    pattern) is token-identical between the sparse and dense-masked
+    implementations on both MoE dispatch backends, and the masked-path
+    recompile count stays bounded by (pattern signature x bucket)."""
+    params = M.init_params(KEY, TINY_MOE)
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, TINY_MOE.vocab_size, int(rng.integers(6, 12))),
+             int(rng.integers(3, 6))) for _ in range(4)]
+
+    def run(impl):
+        spec = AttnMaskSpec(local=True, pattern="local_global", window=8,
+                            impl=impl, bq=8, bk=8)
+        sched = ServeScheduler(params, TINY_MOE, max_seq=24, max_slots=2,
+                               dispatch=dispatch, attn_mask=spec)
+        for prompt, gen in reqs:
+            sched.submit(prompt, gen)
+        return sched.run()
+
+    fops.reset_mask_signatures()
+    sparse = run("sparse")
+    n_sigs = len([s for s in fops.mask_signatures() if s[0] == "sparse"])
+    dense = run("dense")
+    assert set(sparse) == set(dense)
+    for uid in sparse:
+        np.testing.assert_array_equal(sparse[uid], dense[uid])
+    # recompile bound: distinct prompt lengths all bucket to a handful of
+    # (geometry x capacity) keys -- never one signature per request
+    assert 0 < n_sigs <= 2 * len({p.size for p, _ in reqs})
+
+
+@pytest.mark.serve
+def test_serveloop_surfaces_fallback_counter():
+    """mask_impl='ref' routes through the counted oracle; the count shows
+    up in summary()['timing']."""
+    params = M.init_params(KEY, TINY_LOCAL)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0,
+                                 TINY_LOCAL.vocab_size)
+    spec = AttnMaskSpec(local=True, impl="ref", bq=8, bk=8)
+    loop = ServeLoop(params, TINY_LOCAL, max_seq=20, attn_mask=spec)
+    loop.run(prompts, 4)
+    s = loop.summary()
+    assert s["timing"]["attention_ref_fallbacks"] > 0

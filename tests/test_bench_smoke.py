@@ -45,6 +45,22 @@ def test_sweep_smoke_bucket_points(sweep_results):
         assert p["nnzb_stream"] >= p["nnzb_covered"]
 
 
+def test_sweep_smoke_flash_points(sweep_results):
+    """The flash (bq, bk) sweep: every dense and sparse point oracle-parity,
+    winner carries both the sparse and dense tile picks, nothing
+    registered."""
+    fl = sweep_results["flash"]
+    assert fl["dense_points"] and fl["sparse_points"]
+    assert all(p["parity"] for p in fl["points"])
+    assert not fl["registered"]
+    assert {"bq", "bk", "dense_bq", "dense_bk"} <= set(fl["winner"])
+    S = fl["shape"]["S"]
+    for p in fl["sparse_points"]:
+        # the window walk is structurally below the dense grid
+        assert p["walked_tiles"] < (S // p["bq"]) * (S // p["bk"]) or \
+            p["walked_tiles"] <= 8  # tiny smoke grids bottom out at the bucket floor
+
+
 def test_emit_bench_schema(tmp_path, sweep_results):
     from benchmarks.common import emit_bench
 
@@ -100,6 +116,32 @@ def test_bench_serve_pipelined_ab(serve_results):
         assert 0.0 <= ab["route_hidden_frac"] <= 1.0
         if e["two_phase"]:   # gather is fused: no route/execute stats
             assert pip["timing"]["execute_dispatch_ms"] >= 0.0
+
+
+@pytest.fixture(scope="module")
+def attention_results():
+    sys.path.insert(0, REPO_ROOT)
+    try:
+        from benchmarks import bench_attention
+    finally:
+        sys.path.pop(0)
+    return bench_attention.run(smoke=True)
+
+
+def test_bench_attention_smoke(attention_results):
+    """The sparse-vs-dense attention bench: every point bit-identical to the
+    dense-masked kernel, walked-tile counts below the dense grid, schema
+    stable for the BENCH_attention.json artifact."""
+    assert attention_results["points"]
+    for p in attention_results["points"]:
+        assert p["parity_bit_identical"] is True
+        assert p["walked_tiles"] <= p["walked_tiles_bucketed"]
+        assert p["walked_tiles_bucketed"] <= p["dense_tiles"]
+        assert p["t_dense_us"] > 0 and p["t_sparse_us"] > 0
+        assert p["speedup"] > 0
+    # windows are increasing fractions -> walked tiles monotone nondecreasing
+    walked = [p["walked_tiles"] for p in attention_results["points"]]
+    assert walked == sorted(walked)
 
 
 @pytest.fixture(scope="module")
