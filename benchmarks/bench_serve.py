@@ -26,10 +26,19 @@ freed slots.  What this measures (and records in ``BENCH_serve.json``):
   device); the ``ab`` row records decode tok/s for both, p50/p99 token
   latency for both, the fraction of host-route time hidden behind an
   in-flight execute, and that the two runs emitted identical tokens.
+* **healthy-vs-faulty A/B** (``--fault-rate R`` with R > 0) -- the same
+  trace re-runs pipelined under a seeded ``FaultPlan.random`` that
+  poisons/excepts a fraction of requests; the ``fault`` row records the
+  faulty run's decode tok/s next to the healthy one, the
+  finished/failed/shed/retry counts, how many injected faults actually
+  triggered, and that every *surviving* request emitted tokens
+  bit-identical to its healthy-run counterpart (the isolation contract
+  of the resilience layer).
 
 Run modes:
   python benchmarks/bench_serve.py                 # smoke-scout trace
   python benchmarks/bench_serve.py --smoke         # tiny config, CI guard
+  python benchmarks/bench_serve.py --fault-rate .3 # + resilience A/B row
 """
 from __future__ import annotations
 
@@ -95,7 +104,8 @@ def drive(sched: ServeScheduler,
     return s
 
 
-def run(*, smoke: bool = False, dispatch: Optional[str] = None) -> dict:
+def run(*, smoke: bool = False, dispatch: Optional[str] = None,
+        fault_rate: float = 0.0) -> dict:
     """The benchmark body; importable by the bench-tier smoke test."""
     if smoke:
         cfg, max_seq, slots = TINY, 24, 2
@@ -169,6 +179,37 @@ def run(*, smoke: bool = False, dispatch: Optional[str] = None) -> dict:
                                                    0.0),
             "tokens_match": tokens["serial"] == tokens["pipelined"],
         }
+        if fault_rate > 0:
+            # healthy-vs-faulty A/B: the same pipelined trace under a
+            # seeded random fault plan -- survivors must emit the same
+            # tokens as in the healthy run (per-request isolation)
+            from repro.runtime import resilience as R
+
+            uids = list(range(trace_kw["n_requests"]))
+            plan = R.FaultPlan.random(17, uids, fault_rate)
+            sched = ServeScheduler(params, cfg, max_seq=max_seq,
+                                   max_slots=slots, dispatch=backend,
+                                   pipeline_depth=1, fault_plan=plan)
+            fs = drive(sched, synth_trace(**trace_kw))
+            healthy = tokens["pipelined"]
+            survivors = {r.uid: list(map(int, r.tokens))
+                         for r in sched.finished}
+            fr = fs["requests"]
+            e["fault"] = {
+                "fault_rate": fault_rate,
+                "faults_injected": len(plan.specs),
+                "faults_triggered": len(plan.triggered),
+                "healthy_tok_per_s": pip["decode_tok_per_s"],
+                "faulty_tok_per_s": fs.get("decode", {}).get("tok_per_s",
+                                                             0.0),
+                "finished": fr["finished"],
+                "failed": fr["failed"],
+                "shed": fr["shed"],
+                "retries": fr["retries"],
+                "ladder": fs["health"]["ladder"],
+                "survivor_tokens_match": all(
+                    survivors[uid] == healthy[uid] for uid in survivors),
+            }
         out[backend] = e
     return out
 
@@ -179,9 +220,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--dispatch", choices=["gather", "bcsr"], default=None)
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="re-run the pipelined trace under a seeded random "
+                         "fault plan and emit a healthy-vs-faulty A/B row")
     args = ap.parse_args()
 
-    payload = run(smoke=args.smoke, dispatch=args.dispatch)
+    payload = run(smoke=args.smoke, dispatch=args.dispatch,
+                  fault_rate=args.fault_rate)
     for backend in ("gather", "bcsr"):
         e = payload[backend]
         lat = e["token_latency_ms"]
@@ -207,6 +252,17 @@ def main():
                   f"{ab['pipelined_p99_ms']:.1f}ms;"
                   f"route_hidden={100 * ab['route_hidden_frac']:.0f}%;"
                   f"tokens_match={ab['tokens_match']}"))
+        if "fault" in e:
+            fl = e["fault"]
+            print(row(f"serve/{backend}/faulty_tok_per_s",
+                      fl["faulty_tok_per_s"],
+                      f"healthy={fl['healthy_tok_per_s']:.1f};"
+                      f"rate={fl['fault_rate']};"
+                      f"triggered={fl['faults_triggered']}/"
+                      f"{fl['faults_injected']};"
+                      f"finished={fl['finished']};failed={fl['failed']};"
+                      f"shed={fl['shed']};retries={fl['retries']};"
+                      f"survivors_match={fl['survivor_tokens_match']}"))
     path = emit_bench("serve", payload)
     print(f"wrote {path}")
 

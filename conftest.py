@@ -35,6 +35,10 @@ def pytest_addoption(parser):
     parser.addoption(
         "--run-bench", action="store_true", default=False,
         help="run tests marked bench (benchmark-harness smoke)")
+    parser.addoption(
+        "--run-stress", action="store_true", default=False,
+        help="run tests marked stress (randomized fault/eviction "
+             "resilience runs)")
 
 
 def pytest_collection_modifyitems(config, items):
@@ -54,10 +58,11 @@ def pytest_collection_modifyitems(config, items):
         arg.endswith(".py") or "::" in arg for arg in config.args)
     if config.getoption("-m") or named_explicitly:
         return
-    # slow, serve, and bench are independently opt-in tiers
+    # slow, serve, bench, and stress are independently opt-in tiers
     skip_marks = {m for m, opt in (("slow", "--run-slow"),
                                    ("serve", "--run-serve"),
-                                   ("bench", "--run-bench"))
+                                   ("bench", "--run-bench"),
+                                   ("stress", "--run-stress"))
                   if not config.getoption(opt)}
     selected = [i for i in items
                 if not any(m in i.keywords for m in skip_marks)]

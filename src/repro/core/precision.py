@@ -177,8 +177,34 @@ def _amax_scale(x: jax.Array, axes, qmax: float) -> jax.Array:
     return jnp.where(amax > 0, amax / qmax, 1.0).astype(jnp.float32)
 
 
+_SAT_MAX = 3.0e38  # < f32max with headroom: qmax * (SAT_MAX / qmax) stays
+                   # finite after the scale's round-to-nearest, so a
+                   # saturated stream dequantizes to finite values
+
+
+def _guard_nonfinite(x: jax.Array, who: str, saturate: bool) -> jax.Array:
+    """Non-finite input otherwise corrupts the quantized stream *silently*:
+    an Inf amax yields an Inf scale (dequant NaN), a NaN amax fails the
+    ``amax > 0`` gate and quantizes the row against scale 1.0 (values
+    zeroed / NaN-cast).  ``saturate=True`` deterministically clamps
+    (NaN -> 0, +/-Inf -> +/-3e38) in-graph; by default, concrete inputs
+    raise ``FloatingPointError`` instead.  Traced inputs cannot be
+    value-checked, so under jit the check is a no-op unless saturating --
+    runtime poison under jit is the serving health layer's job."""
+    if saturate:
+        return jnp.where(jnp.isnan(x), jnp.float32(0.0),
+                         jnp.clip(x, -_SAT_MAX, _SAT_MAX))
+    if not isinstance(x, jax.core.Tracer) and not bool(jnp.isfinite(x).all()):
+        raise FloatingPointError(
+            f"{who}: non-finite input would produce a non-finite amax scale "
+            f"and poison the quantized stream; pass saturate=True to clamp "
+            f"deterministically instead")
+    return x
+
+
 def quantize_blocks(blocks: jax.Array, dtype, *, rounding: str = "nearest",
-                    seed: int = 0) -> Tuple[jax.Array, jax.Array]:
+                    seed: int = 0, saturate: bool = False
+                    ) -> Tuple[jax.Array, jax.Array]:
     """Per-block symmetric quantization of a ``(..., nnzb, bm, bn)`` stream.
 
     One f32 scale per (bm, bn) block: ``scale = max|block| / qmax`` (1.0 for
@@ -186,7 +212,8 @@ def quantize_blocks(blocks: jax.Array, dtype, *, rounding: str = "nearest",
     ``(values, scales)`` with ``values.shape == blocks.shape`` and
     ``scales.shape == blocks.shape[:-2]``.
     """
-    x = blocks.astype(jnp.float32)
+    x = _guard_nonfinite(blocks.astype(jnp.float32), "quantize_blocks",
+                         saturate)
     _, _, qmax = _resolve_quant(dtype)
     scales = _amax_scale(x, (-2, -1), qmax)
     q = _round_to(x / scales[..., None, None], dtype, rounding, seed)
@@ -203,12 +230,13 @@ def dequantize_blocks(values: jax.Array, scales: jax.Array) -> jax.Array:
 
 
 def quantize_rows(vals: jax.Array, dtype, *, rounding: str = "nearest",
-                  seed: int = 0) -> Tuple[jax.Array, jax.Array]:
+                  seed: int = 0, saturate: bool = False
+                  ) -> Tuple[jax.Array, jax.Array]:
     """Per-row quantization over the *last* axis: ELL row streams
     ``(R, la)`` and KV time-slices ``(..., t, head_dim)`` both scale over
     their trailing axis.  Returns ``(values, scales)`` with
     ``scales.shape == vals.shape[:-1]``."""
-    x = vals.astype(jnp.float32)
+    x = _guard_nonfinite(vals.astype(jnp.float32), "quantize_rows", saturate)
     _, _, qmax = _resolve_quant(dtype)
     scales = _amax_scale(x, -1, qmax)
     q = _round_to(x / scales[..., None], dtype, rounding, seed)
@@ -261,7 +289,8 @@ jax.tree_util.register_pytree_node(
 
 
 def quantize_tensor(x: jax.Array, dtype, *, axis: int = -1,
-                    rounding: str = "nearest", seed: int = 0) -> QuantTensor:
+                    rounding: str = "nearest", seed: int = 0,
+                    saturate: bool = False) -> QuantTensor:
     """Quantize a dense tensor with one scale per slice along ``axis``
     (the reduction axis of the consuming contraction, so scale error stays
     per-output-channel).  Returns a :class:`QuantTensor` pytree.
@@ -273,7 +302,7 @@ def quantize_tensor(x: jax.Array, dtype, *, axis: int = -1,
     if not -x.ndim <= axis < x.ndim:
         raise ValueError(f"quantize_tensor: axis {axis} out of range for "
                          f"ndim {x.ndim}")
-    xf = x.astype(jnp.float32)
+    xf = _guard_nonfinite(x.astype(jnp.float32), "quantize_tensor", saturate)
     _, _, qmax = _resolve_quant(dtype)
     scales = _amax_scale(xf, axis, qmax)
     q = _round_to(xf / jnp.expand_dims(scales, axis), dtype, rounding, seed)

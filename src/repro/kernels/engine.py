@@ -205,12 +205,21 @@ class StreamPipeline:
         return len(self._inflight)
 
     def push(self, tag, handle) -> None:
-        """Enqueue a dispatched result; block the oldest out beyond depth."""
+        """Enqueue a dispatched result; block the oldest out beyond depth.
+
+        If waiting an entry out raises (a deferred device error surfacing at
+        the sync point), every remaining in-flight entry is released via
+        :meth:`abort` before the exception propagates -- the pipeline never
+        wedges with a leaked slot."""
         self._inflight.append((tag, handle))
         self.pushes += 1
-        while len(self._inflight) > self.depth:
-            _, h = self._inflight.popleft()
-            jax.block_until_ready(h)
+        try:
+            while len(self._inflight) > self.depth:
+                _, h = self._inflight.popleft()
+                jax.block_until_ready(h)
+        except BaseException:
+            self.abort()
+            raise
 
     def busy(self) -> bool:
         """Is any in-flight entry still executing on the device?"""
@@ -222,10 +231,29 @@ class StreamPipeline:
         return False
 
     def drain(self) -> None:
-        """Block every in-flight entry out (phase boundary / loop reset)."""
+        """Block every in-flight entry out (phase boundary / loop reset).
+
+        Exception-safe like :meth:`push`: a failing wait aborts the rest of
+        the queue before re-raising, so the pipeline is empty either way."""
+        try:
+            while self._inflight:
+                _, h = self._inflight.popleft()
+                jax.block_until_ready(h)
+        except BaseException:
+            self.abort()
+            raise
+
+    def abort(self) -> None:
+        """Release every in-flight entry without raising: best-effort wait
+        (swallowing deferred device errors -- they already surfaced or are
+        being handled by the caller) and unconditionally empty the queue, so
+        the next ``decode_step`` starts from a clean pipeline."""
         while self._inflight:
             _, h = self._inflight.popleft()
-            jax.block_until_ready(h)
+            try:
+                jax.block_until_ready(h)
+            except Exception:
+                pass
 
 
 def _pad_dim(x: jax.Array, dim: int, multiple: int, value=0) -> jax.Array:

@@ -55,6 +55,24 @@ Both drivers take a ``pipeline_depth`` knob (default 0):
   (tests/test_serve_pipeline.py); ``summary()["timing"]`` reports how much
   route time the overlap actually hid (``route_hidden_frac``).
 
+**Resilience** (``runtime.resilience``, tests/README.md "Resilience
+contract"): both drivers take a deterministic ``fault_plan`` whose staged
+hooks (prefill / route / execute / attention / sample / quantize) poison
+rows, corrupt quant scales, raise, or straggle on demand.  The scheduler
+isolates failures per request: cheap on-device ``isfinite`` health bits
+piggyback on the existing per-step token fetch (zero NEW host syncs at
+depth 1), a poisoned row is moved to a FAILED state, its cache row
+scatter-blanked (``model.blank_cache_row``) and its slot refilled --
+co-batched survivors' tokens stay bit-identical to a fault-free run
+(per-row independence, the same law behind the batch-bucket contract).
+Failed prefills and decode steps retry under a bounded exponential-backoff
+``RetryPolicy`` (faults fire before any key split or cache write, so a
+retry reproduces the fault-free step exactly); requests carry optional
+TTFT/total deadlines and the admission queue is bounded with an explicit
+shed policy.  Accumulated failures walk a ``DegradationLadder`` (quantized
+KV -> wide, sparse mask -> ref, pipeline depth 1 -> 0); everything is
+surfaced in ``summary()["health"]``.
+
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --smoke \
       --batch 4 --prompt-len 32 --gen 32
@@ -82,6 +100,7 @@ from repro.kernels.flash_attention import ops as flash_ops
 from repro.models import model as M
 from repro.models import moe
 from repro.parallel import context as pctx
+from repro.runtime import resilience as R
 
 
 @dataclasses.dataclass
@@ -96,7 +115,14 @@ class StepStat:
 
 
 def _percentiles_ms(seconds: List[float]) -> Dict[str, float]:
-    """p50/p99/mean of a latency sample, in milliseconds."""
+    """p50/p99/mean of a latency sample, in milliseconds.
+
+    Hardened for the failure paths: an empty sample (every request faulted
+    or was shed before its first token) returns zeros, and None / non-finite
+    entries (unset latency marks) are dropped rather than propagated into
+    the percentiles."""
+    seconds = [s for s in (seconds or [])
+               if s is not None and np.isfinite(s)]
     if not seconds:
         return {"p50": 0.0, "p99": 0.0, "mean": 0.0, "n": 0}
     a = np.asarray(seconds, np.float64) * 1e3
@@ -105,19 +131,10 @@ def _percentiles_ms(seconds: List[float]) -> Dict[str, float]:
             "mean": float(a.mean()), "n": int(a.size)}
 
 
-@functools.lru_cache(maxsize=None)
-def _sampler_jit(vocab: int, temperature: float, per_row_keys: bool):
-    """On-device sampler for the pipelined hot path: the same math as the
-    eager ``_sample``/``_sample_one`` (vocab slice, argmax or categorical),
-    fused into one compiled program so the sampled token array can feed the
-    next step without any host fetch of the logits.
-
-    ``per_row_keys=False`` takes one key for the whole batch and returns
-    ``(B, 1)`` int32 (the ``ServeLoop`` shape); ``per_row_keys=True`` takes
-    a ``(B, 2)`` stack of per-request keys and vmaps the categorical over
-    rows, returning ``(B,)`` int32 -- bit-identical per row to sampling
-    that row alone with its own key (the scheduler's composition-
-    independence law).  Greedy (temperature 0) ignores the key operand."""
+def _sampler_body(vocab: int, temperature: float, per_row_keys: bool):
+    """The sampling math shared by :func:`_sampler_jit` and
+    :func:`_sampler_health_jit`: vocab slice, argmax or categorical --
+    identical to the eager ``_sample``/``_sample_one``."""
     if temperature > 0:
         if per_row_keys:
             def fn(logits, keys):
@@ -138,7 +155,51 @@ def _sampler_jit(vocab: int, temperature: float, per_row_keys: bool):
             def fn(logits, key):
                 return jnp.argmax(logits[:, :vocab],
                                   axis=-1)[:, None].astype(jnp.int32)
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def _sampler_jit(vocab: int, temperature: float, per_row_keys: bool):
+    """On-device sampler for the pipelined hot path: the same math as the
+    eager ``_sample``/``_sample_one`` (vocab slice, argmax or categorical),
+    fused into one compiled program so the sampled token array can feed the
+    next step without any host fetch of the logits.
+
+    ``per_row_keys=False`` takes one key for the whole batch and returns
+    ``(B, 1)`` int32 (the ``ServeLoop`` shape); ``per_row_keys=True`` takes
+    a ``(B, 2)`` stack of per-request keys and vmaps the categorical over
+    rows, returning ``(B,)`` int32 -- bit-identical per row to sampling
+    that row alone with its own key (the scheduler's composition-
+    independence law).  Greedy (temperature 0) ignores the key operand."""
+    return jax.jit(_sampler_body(vocab, temperature, per_row_keys))
+
+
+@functools.lru_cache(maxsize=None)
+def _sampler_health_jit(vocab: int, temperature: float, per_row_keys: bool):
+    """:func:`_sampler_jit` + per-row health bits, one compiled program.
+
+    Returns ``(tokens, finite)`` where ``finite[b]`` is the
+    ``all(isfinite)`` reduction of row ``b``'s vocab slice -- the poison
+    detector.  The scheduler fetches both in the SAME ``jax.device_get``
+    it already spends on the token ids, so per-request isolation costs
+    zero additional host syncs at ``pipeline_depth=1``; token bits are
+    untouched (the sampler body is shared verbatim)."""
+    body = _sampler_body(vocab, temperature, per_row_keys)
+
+    def fn(logits, key):
+        fin = jnp.all(jnp.isfinite(logits[:, :vocab]), axis=-1)
+        return body(logits, key), fin
     return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _health_accum_jit(vocab: int):
+    """Fold one decode step's last-position logits into a running per-row
+    health mask, on device: ``acc & all(isfinite(row))``.  Dispatched (not
+    fetched) per step, read back once at the end-of-run drain -- the
+    ``ServeLoop`` health path stays sync-free."""
+    return jax.jit(lambda lg, acc: acc & jnp.all(
+        jnp.isfinite(lg[:, :vocab]), axis=-1))
 
 
 class _ServeBase:
@@ -152,7 +213,10 @@ class _ServeBase:
                  sample_seed: int = 3, pipeline_depth: int = 0,
                  quantize_experts: Optional[str] = None,
                  kv_quant: Optional[str] = None,
-                 attn_mask: Optional[AttnMaskSpec] = None):
+                 attn_mask: Optional[AttnMaskSpec] = None,
+                 fault_plan: Optional[R.FaultPlan] = None,
+                 retry: Optional[R.RetryPolicy] = None,
+                 fail_threshold: int = 3):
         self.params, self.cfg = params, cfg
         self.quantize_experts = quantize_experts
         self.kv_quant = kv_quant
@@ -176,6 +240,57 @@ class _ServeBase:
         self.pipeline_depth = int(pipeline_depth)
         # validates the depth (0 = serial, 1 = double-buffered)
         self._pipe = engine.StreamPipeline(self.pipeline_depth)
+        # -- resilience state (runtime.resilience) --------------------------
+        self.fault_plan = fault_plan
+        self.retry = retry if retry is not None else R.RetryPolicy()
+        self.health = R.HealthTracker()
+        self.ladder = R.DegradationLadder.for_serving(
+            kv_quant=kv_quant, attn_mask=attn_mask,
+            pipeline_depth=self.pipeline_depth,
+            fail_threshold=fail_threshold)
+        self._row_uids: Optional[List[Optional[int]]] = None
+
+    # ---------------------------------------------------------- resilience --
+
+    def _fault(self, stage: str, x, *, step: Optional[int] = None):
+        """Fault-plan hook for a batched activation; identity w/o a plan."""
+        if self.fault_plan is None:
+            return x
+        return self.fault_plan.apply(stage, x, step=step,
+                                     uids=self._row_uids)
+
+    def _fault_cache(self, cache, *, step: Optional[int] = None,
+                     uids=None, nrows: int = 0):
+        """Quantize-stage hook: corrupt cache scale rows per the plan."""
+        if self.fault_plan is None:
+            return cache
+        return self.fault_plan.apply_cache(cache, step=step, uids=uids,
+                                           nrows=nrows)
+
+    def _note_failure(self):
+        """Count one failure toward the degradation ladder; apply the rung
+        it returns (if any) to this driver's live configuration."""
+        rung = self.ladder.note_failure()
+        if rung is not None:
+            self._apply_rung(rung)
+
+    def _apply_rung(self, rung: str):
+        self.health.record("degrade", rung=rung)
+        if rung == "kv_wide":
+            # quantized KV -> wide f32 KV: rebuild the live cache without
+            # scale leaves; subsequent prefills/steps see kv_quant=None
+            self._pipe.abort()
+            if getattr(self, "cache", None) is not None:
+                self.cache = R.dequantize_cache(self.cache, jnp.float32)
+            self.kv_quant = None
+        elif rung == "mask_ref":
+            # sparse stream-walk attention -> the jnp reference path
+            self.attn_mask = dataclasses.replace(self.attn_mask, impl="ref")
+        elif rung == "pipeline_serial":
+            # depth 1 -> 0: drain what's in flight, go fully serial
+            self._pipe.abort()
+            self.pipeline_depth = 0
+            self._pipe = engine.StreamPipeline(0)
 
     # ------------------------------------------------------------- phases --
 
@@ -220,6 +335,13 @@ class _ServeBase:
         genuinely still running on the device -- route time hidden behind
         device compute (0 by construction at depth 0)."""
         step = self._step_label()
+        # fault hooks: "attention" poisons the attention half's output
+        # feeding this layer, "route" fires before the host routing work
+        # (exception kind = the host route failure mode).  Poisons are one
+        # dispatched jnp.where each -- no sync, rows outside the spec's
+        # selection are bit-identical untouched.
+        h = self._fault("attention", h, step=step)
+        h = self._fault("route", h, step=step)
         pipelined = self.pipeline_depth > 0
         drain_s = 0.0
         if not pipelined:
@@ -246,6 +368,7 @@ class _ServeBase:
         self._exec_keys.add(sig)
         t0 = time.monotonic()
         out, new_counts = moe.execute_moe_jit(p_ffn, h, plan, cfg)
+        out = self._fault("execute", out, step=step)
         # depth 0: push blocks immediately (the serial execute wall);
         # depth 1: the execute stays in flight behind the next host route
         self._pipe.push(plan, out)
@@ -317,6 +440,15 @@ class _ServeBase:
                 }
             out["compile_signatures"] = len(self._exec_keys)
         out["pipeline"] = {"depth": self.pipeline_depth}
+        # resilience surface: monotonic counters + bounded event log
+        # (HealthTracker), the degradation-ladder position, and the exact
+        # faults the plan fired (see tests/README.md "Resilience contract")
+        out["health"] = {
+            **self.health.snapshot(),
+            "ladder": self.ladder.state(),
+            "faults_triggered": (list(self.fault_plan.triggered)
+                                 if self.fault_plan is not None else []),
+        }
         return out
 
 
@@ -345,6 +477,13 @@ class ServeLoop(_ServeBase):
     kv_quant : narrow dtype name to store full-context KV caches as
         per-position narrow values + f32 scales (local ring buffers stay
         wide); None (default) keeps the wide cache bit-for-bit.
+    fault_plan : optional ``resilience.FaultPlan`` whose staged hooks this
+        loop calls at every prefill / route / execute / attention / sample /
+        quantize boundary (identity when None).
+    retry, fail_threshold : the resilience knobs shared with the scheduler
+        (here the retry policy is only carried for ``summary()`` symmetry;
+        the static-batch loop re-raises step failures after aborting the
+        pipeline -- per-request retry lives in :class:`ServeScheduler`).
     """
 
     def __init__(self, params, cfg, *, max_seq: int,
@@ -354,18 +493,27 @@ class ServeLoop(_ServeBase):
                  pipeline_depth: int = 0,
                  quantize_experts: Optional[str] = None,
                  kv_quant: Optional[str] = None,
-                 attn_mask: Optional[AttnMaskSpec] = None):
+                 attn_mask: Optional[AttnMaskSpec] = None,
+                 fault_plan: Optional[R.FaultPlan] = None,
+                 retry: Optional[R.RetryPolicy] = None,
+                 fail_threshold: int = 3):
         super().__init__(params, cfg, dispatch=dispatch, two_phase=two_phase,
                          temperature=temperature, sample_seed=sample_seed,
                          pipeline_depth=pipeline_depth,
                          quantize_experts=quantize_experts,
-                         kv_quant=kv_quant, attn_mask=attn_mask)
+                         kv_quant=kv_quant, attn_mask=attn_mask,
+                         fault_plan=fault_plan, retry=retry,
+                         fail_threshold=fail_threshold)
         self.max_seq = max_seq
         self._decode_fused = jax.jit(
             lambda p, c, pos, tok: M.decode_step(p, cfg, c, pos, tok))
         self.cache = None
         self.pos: Optional[int] = None
         self.generated: List[jax.Array] = []
+        # per-row health: a device-resident running isfinite mask,
+        # accumulated per step (dispatch only) and fetched once per run
+        self._health_dev: Optional[jax.Array] = None
+        self.health_rows: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------- phases --
 
@@ -405,10 +553,15 @@ class ServeLoop(_ServeBase):
                                                attn_mask=self.attn_mask)
         logits, cache = jax.block_until_ready((logits, cache))
         self._pipe.drain()   # prefill executes all completed with logits
+        logits = self._fault("prefill", logits, step=-1)
+        cache = self._fault_cache(cache, step=-1,
+                                  nrows=int(prompts.shape[0]))
         self.stats.append(StepStat(
             "prefill", -1, time.monotonic() - t0,
             tokens=int(np.prod(prompts.shape))))
         self.cache, self.pos = cache, int(pos)
+        self._health_dev = jnp.all(
+            jnp.isfinite(logits[:, -1, : self.cfg.vocab_size]), axis=-1)
         nxt = self._sample(logits[:, -1])
         self.generated = [nxt]
         return nxt
@@ -452,6 +605,8 @@ class ServeLoop(_ServeBase):
                 f"{step + 2}). Raise max_seq or generate fewer tokens.")
         tok = self.generated[-1]
         pipelined = self.pipeline_depth > 0
+        self.cache = self._fault_cache(self.cache, step=step,
+                                       nrows=int(tok.shape[0]))
         t0 = time.monotonic()
         if self.two_phase:
             logits, self.cache = M.decode_step_layered(
@@ -462,6 +617,11 @@ class ServeLoop(_ServeBase):
                 logits, self.cache = self._decode_fused(
                     self.params, self.cache, jnp.asarray(pos, jnp.int32),
                     tok)
+        logits = self._fault("sample", logits, step=step)
+        if self._health_dev is not None:
+            # dispatched, never fetched here: the run-end drain reads it
+            self._health_dev = _health_accum_jit(self.cfg.vocab_size)(
+                logits[:, -1], self._health_dev)
         if pipelined:
             # no host sync at all: the sampled token array feeds the next
             # step's embedding on device; the step wall is dispatch time
@@ -512,8 +672,23 @@ class ServeLoop(_ServeBase):
         self._pipe.drain()
         self._sample_key = (jax.random.PRNGKey(self._sample_seed)
                             if sample_key is None else sample_key)
-        self.prefill(prompts, embeddings=embeddings)
-        self.decode(gen - 1)
+        self._health_dev = None
+        self.health_rows = None
+        try:
+            self.prefill(prompts, embeddings=embeddings)
+            self.decode(gen - 1)
+        except BaseException:
+            # exception mid-run (host route failure, injected fault, ...):
+            # release every in-flight execute so the loop object stays
+            # usable -- a wedged StreamPipeline was the pre-resilience bug
+            self._pipe.abort()
+            raise
+        if self._health_dev is not None:
+            # the one health fetch of the run, at the existing drain point
+            self.health_rows = np.asarray(self._health_dev)
+            bad = int((~self.health_rows).sum())
+            if bad:
+                self.health.record("rows_poisoned", rows=int(bad))
         return np.asarray(jnp.concatenate(self.generated, axis=1))
 
     def summary(self) -> Dict[str, Any]:
@@ -535,6 +710,8 @@ class ServeLoop(_ServeBase):
             if wall > 0:
                 batch = self.generated[0].shape[0] if self.generated else 0
                 out["decode"]["tok_per_s"] = batch * dec["calls"] / wall
+        if self.health_rows is not None:
+            out["health"]["rows_finite"] = self.health_rows.tolist()
         return out
 
 
@@ -548,7 +725,14 @@ class Request:
     ``latencies_s`` (wall seconds of the step that emitted each token --
     the prefill pass for token 0, the shared decode step after), ``slot``
     (the cache batch row while resident), ``pos`` (next cache write
-    position), and the timing marks used for first-token latency."""
+    position), and the timing marks used for first-token latency.
+
+    ``state`` walks ``queued -> active -> finished`` on the happy path;
+    the resilience layer adds ``failed`` (poisoned row or exhausted prefill
+    retries -- ``fail_reason`` says why) and ``shed`` (bounded-queue
+    admission rejection or an expired deadline before residency).
+    ``ttft_deadline_s`` / ``deadline_s`` are optional wall-clock budgets
+    from submit time to first token / final token."""
     prompt: np.ndarray
     max_new_tokens: int
     eos_id: Optional[int] = None
@@ -561,6 +745,11 @@ class Request:
     submit_time: float = 0.0
     first_token_s: Optional[float] = None
     key: Optional[jax.Array] = None    # per-request sampling key chain
+    state: str = "queued"              # queued|active|finished|failed|shed
+    fail_reason: Optional[str] = None
+    retries: int = 0
+    ttft_deadline_s: Optional[float] = None
+    deadline_s: Optional[float] = None
 
     @property
     def prompt_len(self) -> int:
@@ -606,12 +795,20 @@ class ServeScheduler(_ServeBase):
                  pipeline_depth: int = 0,
                  quantize_experts: Optional[str] = None,
                  kv_quant: Optional[str] = None,
-                 attn_mask: Optional[AttnMaskSpec] = None):
+                 attn_mask: Optional[AttnMaskSpec] = None,
+                 fault_plan: Optional[R.FaultPlan] = None,
+                 retry: Optional[R.RetryPolicy] = None,
+                 fail_threshold: int = 3,
+                 max_queue: Optional[int] = None,
+                 shed_policy: str = "reject",
+                 clock=None):
         super().__init__(params, cfg, dispatch=dispatch, two_phase=two_phase,
                          temperature=temperature, sample_seed=sample_seed,
                          pipeline_depth=pipeline_depth,
                          quantize_experts=quantize_experts,
-                         kv_quant=kv_quant, attn_mask=attn_mask)
+                         kv_quant=kv_quant, attn_mask=attn_mask,
+                         fault_plan=fault_plan, retry=retry,
+                         fail_threshold=fail_threshold)
         self.max_seq = max_seq
         self.batch_min_bucket = batch_min_bucket
         # allocate the slot pool at its own bucket so every step bucket,
@@ -624,6 +821,16 @@ class ServeScheduler(_ServeBase):
         self.slots: List[Optional[Request]] = [None] * self.n_slots
         self.queue: Deque[Request] = collections.deque()
         self.finished: List[Request] = []
+        self.failed: List[Request] = []
+        self.shed: List[Request] = []
+        if shed_policy not in ("reject", "drop_oldest"):
+            raise ValueError("shed_policy must be 'reject' or 'drop_oldest'")
+        self.max_queue = max_queue
+        self.shed_policy = shed_policy
+        # injectable time/sleep so deadline & backoff tests run on a fake
+        # clock instead of wall time
+        self._clock = clock if clock is not None else time.monotonic
+        self._sleep = time.sleep
         self.step_idx = 0
         self._stat_step = -1
         self._next_uid = 0
@@ -637,10 +844,18 @@ class ServeScheduler(_ServeBase):
         return self._stat_step
 
     def submit(self, prompt, max_new_tokens: int,
-               eos_id: Optional[int] = None) -> Request:
+               eos_id: Optional[int] = None,
+               ttft_deadline_s: Optional[float] = None,
+               deadline_s: Optional[float] = None) -> Request:
         """Queue a request.  Admission control happens here: a request whose
         prompt + generation budget cannot fit the cache is refused up front
-        (its final token is sampled but never written, hence the ``- 1``)."""
+        (its final token is sampled but never written, hence the ``- 1``),
+        and a full bounded queue (``max_queue``) sheds per ``shed_policy``
+        -- ``"reject"`` raises :class:`resilience.ShedError` at the caller,
+        ``"drop_oldest"`` sheds the oldest queued request to make room.
+        ``ttft_deadline_s`` / ``deadline_s`` bound submit->first-token /
+        submit->completion wall time; expired requests are shed (queued) or
+        failed (resident) at the next scheduler tick."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if max_new_tokens < 1:
             raise ValueError("submit: max_new_tokens must be >= 1")
@@ -651,9 +866,22 @@ class ServeScheduler(_ServeBase):
                 f"({prompt.size} prompt + {max_new_tokens} generated - 1) "
                 f"but max_seq is {self.max_seq}; it could never be served "
                 "without a KV-cache overflow.")
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            if self.shed_policy == "reject":
+                self.health.record("shed", reason="queue_full",
+                                   uid=self._next_uid)
+                raise R.ShedError(
+                    f"submit: admission queue full ({len(self.queue)} >= "
+                    f"max_queue {self.max_queue}); request rejected "
+                    f"(shed_policy='reject')")
+            # drop_oldest: the oldest *queued* (never-resident) request
+            # yields its place to the newcomer
+            self._shed(self.queue.popleft(), "queue_full_drop_oldest")
         req = Request(prompt=prompt, max_new_tokens=max_new_tokens,
                       eos_id=eos_id, uid=self._next_uid,
-                      submit_time=time.monotonic(),
+                      submit_time=self._clock(),
+                      ttft_deadline_s=ttft_deadline_s,
+                      deadline_s=deadline_s,
                       key=jax.random.fold_in(
                           jax.random.PRNGKey(self._sample_seed),
                           self._next_uid))
@@ -677,31 +905,129 @@ class ServeScheduler(_ServeBase):
         self.slots[req.slot] = None
         req.slot = None
         req.done = True
+        req.state = "finished"
         self.finished.append(req)
 
-    def _prefill_into(self, req: Request, slot: int):
-        """Single-request prefill, scattered into cache batch row ``slot``."""
+    # -------------------------------------------------- failure lifecycle --
+
+    def _fail(self, req: Request, reason: str, *, poisoned: bool = False):
+        """Move a request to the FAILED terminal state.  A poisoned
+        resident additionally gets its cache row scatter-blanked
+        (``model.blank_cache_row``) so stale NaN/Inf state cannot leak into
+        the admission that refills the slot; neighbouring rows -- and
+        therefore every surviving request's tokens -- are untouched."""
+        if req.slot is not None:
+            slot = req.slot
+            self.slots[slot] = None
+            req.slot = None
+            if poisoned:
+                self.cache = M.blank_cache_row(self.cache, slot)
+        req.done = True
+        req.state = "failed"
+        req.fail_reason = reason
+        self.failed.append(req)
+        self.health.record("request_failed", uid=req.uid, reason=reason)
+        self._note_failure()
+
+    def _shed(self, req: Request, reason: str):
+        """Shed a queued (never-resident) request: terminal, no cache work."""
+        req.done = True
+        req.state = "shed"
+        req.fail_reason = reason
+        self.shed.append(req)
+        self.health.record("shed", reason=reason, uid=req.uid)
+
+    def _shed_expired(self, now: float):
+        """Enforce deadlines at tick boundaries: queued requests past their
+        TTFT or total deadline are shed; residents past their total
+        deadline are failed (their row is clean -- no blanking needed)."""
+        if self.queue:
+            keep: Deque[Request] = collections.deque()
+            while self.queue:
+                r = self.queue.popleft()
+                waited = now - r.submit_time
+                if r.deadline_s is not None and waited > r.deadline_s:
+                    self._shed(r, "deadline")
+                elif (r.ttft_deadline_s is not None
+                        and waited > r.ttft_deadline_s):
+                    self._shed(r, "ttft_deadline")
+                else:
+                    keep.append(r)
+            self.queue = keep
+        for r in list(self.active):
+            if (r.deadline_s is not None
+                    and now - r.submit_time > r.deadline_s):
+                self._fail(r, "deadline")
+
+    def _prefill_into(self, req: Request, slot: int) -> bool:
+        """Single-request prefill into cache row ``slot``, with bounded
+        exponential-backoff retry (``RetryPolicy``).  Failed attempts --
+        a host-side exception anywhere in the layered pass, or non-finite
+        first-token logits -- leave the shared cache and the request's key
+        chain untouched (the health check runs BEFORE the scatter and
+        before any key split), so a retry reproduces the fault-free
+        prefill bit-for-bit.  Returns False once retries are exhausted
+        (the request is moved to FAILED and the slot stays free)."""
+        last_reason = "prefill_failed"
+        for attempt in range(self.retry.max_retries + 1):
+            if attempt:
+                req.retries += 1
+                self.health.record("retry", stage="prefill", uid=req.uid,
+                                   attempt=attempt)
+                delay = self.retry.delay(attempt - 1)
+                if delay:
+                    self._sleep(delay)
+            try:
+                ok = self._prefill_attempt(req, slot)
+            except Exception as e:
+                self._pipe.abort()
+                last_reason = f"prefill_error:{type(e).__name__}"
+                self.health.record("prefill_error", uid=req.uid,
+                                   error=type(e).__name__)
+                self._note_failure()
+                continue
+            if ok:
+                return True
+            last_reason = "prefill_poisoned"
+            self.health.record("prefill_poisoned", uid=req.uid)
+            self._note_failure()
+        self._fail(req, last_reason)
+        return False
+
+    def _prefill_attempt(self, req: Request, slot: int) -> bool:
+        """One prefill try; False = non-finite logits (poisoned)."""
         self._stat_step = -1
+        self._row_uids = [req.uid]
         prompts = jnp.asarray(req.prompt[None, :])
         t0 = time.monotonic()
-        if self.two_phase:
-            logits, cache1, pos = M.prefill_layered(
-                self.params, prompts, self.cfg, max_seq=self.max_seq,
-                cache_dtype=self.cache_dtype, moe_fn=self._moe_two_phase,
-                route_ahead=self.pipeline_depth > 0,
-                kv_quant=self.kv_quant, attn_mask=self.attn_mask)
-        else:
-            with self._dispatch_ctx():
-                logits, cache1, pos = M.prefill(
+        try:
+            if self.two_phase:
+                logits, cache1, pos = M.prefill_layered(
                     self.params, prompts, self.cfg, max_seq=self.max_seq,
-                    cache_dtype=self.cache_dtype, kv_quant=self.kv_quant,
-                    attn_mask=self.attn_mask)
-        logits, cache1 = jax.block_until_ready((logits, cache1))
-        self._pipe.drain()   # prefill executes all completed with logits
+                    cache_dtype=self.cache_dtype, moe_fn=self._moe_two_phase,
+                    route_ahead=self.pipeline_depth > 0,
+                    kv_quant=self.kv_quant, attn_mask=self.attn_mask)
+            else:
+                with self._dispatch_ctx():
+                    logits, cache1, pos = M.prefill(
+                        self.params, prompts, self.cfg, max_seq=self.max_seq,
+                        cache_dtype=self.cache_dtype, kv_quant=self.kv_quant,
+                        attn_mask=self.attn_mask)
+            logits, cache1 = jax.block_until_ready((logits, cache1))
+            self._pipe.drain()  # prefill executes all completed with logits
+            logits = self._fault("prefill", logits)
+        finally:
+            self._row_uids = None
         dt = time.monotonic() - t0
         self.stats.append(StepStat("prefill", self.step_idx, dt,
                                    tokens=req.prompt_len,
                                    extra={"uid": req.uid, "slot": slot}))
+        # the poison gate, BEFORE the scatter and before any key split:
+        # a failed attempt leaves shared + per-request state untouched.
+        # prefill already syncs, so this (vocab,) fetch adds no sync point.
+        last_row = np.asarray(logits[0, -1, : self.cfg.vocab_size])
+        if not np.isfinite(last_row).all():
+            return False
         # one scatter per cache leaf: row `slot` becomes this request, every
         # other row's state is untouched
         self.cache = jax.tree.map(
@@ -709,21 +1035,30 @@ class ServeScheduler(_ServeBase):
                 small[:, 0].astype(big.dtype)),
             self.cache, cache1)
         req.slot, req.pos = slot, int(pos)
+        req.state = "active"
         self.slots[slot] = req
+        # quantize-stage faults corrupt the freshly scattered row's scale
+        # leaves (detected as poison at this request's next sampled logits)
+        self.cache = self._fault_cache(
+            self.cache, uids=[r.uid if r is not None else None
+                              for r in self.slots], nrows=self.n_slots)
         tok = self._sample_one(logits[0, -1], req)
         req.tokens.append(tok)
         req.latencies_s.append(dt)
-        req.first_token_s = time.monotonic() - req.submit_time
+        req.first_token_s = self._clock() - req.submit_time
         self._finish_or_keep(req, tok)
+        return True
 
     def admit(self) -> List[Request]:
         """Prefill queued requests into free slots (lowest index first --
-        keeps the occupied prefix, and so the step's batch bucket, small)."""
+        keeps the occupied prefix, and so the step's batch bucket, small).
+        A request whose prefill exhausts its retries is FAILED and the
+        slot offered to the next queued request."""
         joined = []
         while self.queue and None in self.slots:
             req = self.queue.popleft()
-            self._prefill_into(req, self.slots.index(None))
-            joined.append(req)
+            if self._prefill_into(req, self.slots.index(None)):
+                joined.append(req)
         return joined
 
     # ------------------------------------------------------------- decode --
@@ -734,7 +1069,19 @@ class ServeScheduler(_ServeBase):
 
     def decode_step(self) -> List[Tuple[Request, int]]:
         """One batched decode step over the occupied slot prefix; returns
-        the (request, token) pairs emitted."""
+        the (request, token) pairs emitted.
+
+        Failure handling (the per-request isolation contract,
+        tests/test_resilience.py): a host-side exception anywhere in the
+        step aborts the stream pipeline and retries the whole step under
+        the ``RetryPolicy`` -- nothing was committed (no cache write, no
+        key split, no token append happens before the failure can
+        surface), so the retry reproduces the fault-free step exactly.  A
+        *poisoned* row (non-finite sampled logits, detected by health bits
+        piggybacked on the token fetch) fails only ITS request: the row is
+        evicted and scatter-blanked, the token discarded, and every
+        co-batched survivor keeps bit-identical tokens (per-row
+        independence of attention / prefix-stable MoE / sampling)."""
         active = self.active
         if not active:
             return []
@@ -747,6 +1094,28 @@ class ServeScheduler(_ServeBase):
                     f"ServeScheduler.decode_step: KV-cache overflow -- "
                     f"request {r.uid} at write position {r.pos} >= max_seq "
                     f"{self.max_seq}.")
+        err: Optional[Exception] = None
+        for attempt in range(self.retry.max_retries + 1):
+            if attempt:
+                self.health.record("retry", stage="decode",
+                                   step=self.step_idx, attempt=attempt)
+                delay = self.retry.delay(attempt - 1)
+                if delay:
+                    self._sleep(delay)
+            try:
+                return self._decode_attempt(active)
+            except Exception as e:
+                self._pipe.abort()
+                err = e
+                self.health.record("decode_error", step=self.step_idx,
+                                   error=type(e).__name__)
+                self._note_failure()
+        raise RuntimeError(
+            f"ServeScheduler.decode_step: step {self.step_idx} failed "
+            f"after {self.retry.max_retries} retries") from err
+
+    def _decode_attempt(self, active: List[Request]) -> List[Tuple[Request, int]]:
+        """One decode-step try over the occupied slot prefix."""
         hi = max(i for i, r in enumerate(self.slots) if r is not None) + 1
         bucket = engine.batch_bucket(hi, minimum=self.batch_min_bucket,
                                      cap=self.n_slots)
@@ -757,26 +1126,40 @@ class ServeScheduler(_ServeBase):
             if r is not None:
                 pos_vec[i] = r.pos
                 tok_vec[i, 0] = r.tokens[-1]
+        # quantize-stage faults corrupt live scale rows mid-stream
+        self.cache = self._fault_cache(
+            self.cache, step=self.step_idx,
+            uids=[r.uid if r is not None else None for r in self.slots],
+            nrows=self.n_slots)
         step_cache = jax.tree.map(lambda a: a[:, :bucket], self.cache)
         self._stat_step = self.step_idx
+        self._row_uids = [r.uid if r is not None else None
+                          for r in self.slots[:bucket]]
         pipelined = self.pipeline_depth > 0
         t0 = time.monotonic()
-        if self.two_phase:
-            logits, new_cache = M.decode_step_layered(
-                self.params, self.cfg, step_cache, pos_vec,
-                jnp.asarray(tok_vec), moe_fn=self._moe_two_phase,
-                route_ahead=pipelined)
-        else:
-            with self._dispatch_ctx():
-                logits, new_cache = self._decode_fused(
-                    self.params, step_cache, jnp.asarray(pos_vec),
-                    jnp.asarray(tok_vec))
+        try:
+            if self.two_phase:
+                logits, new_cache = M.decode_step_layered(
+                    self.params, self.cfg, step_cache, pos_vec,
+                    jnp.asarray(tok_vec), moe_fn=self._moe_two_phase,
+                    route_ahead=pipelined)
+            else:
+                with self._dispatch_ctx():
+                    logits, new_cache = self._decode_fused(
+                        self.params, step_cache, jnp.asarray(pos_vec),
+                        jnp.asarray(tok_vec))
+            # the sample hook fires BEFORE any per-request key split below,
+            # so a sample-stage exception retries with key chains intact
+            logits = self._fault("sample", logits, step=self.step_idx)
+        finally:
+            self._row_uids = None
         toks = None
         if pipelined:
             # sample on device (per-request key chains advance on host,
-            # exactly as _sample_one's) and fetch ONLY the (bucket,) token
-            # ids -- the single per-step host sync the scheduler cannot
-            # shed: EOS / eviction decisions need the values
+            # exactly as _sample_one's) and fetch the (bucket,) token ids
+            # PLUS the per-row isfinite health bits in the single
+            # device_get the scheduler already cannot shed: EOS / eviction
+            # decisions need the values.  Zero additional host syncs.
             if self.temperature > 0:
                 keys, dummy = [], None
                 for r in self.slots[:bucket]:
@@ -790,11 +1173,15 @@ class ServeScheduler(_ServeBase):
                 key_arr = jnp.stack(keys)
             else:
                 key_arr = jnp.zeros((bucket, 2), jnp.uint32)
-            toks = np.asarray(_sampler_jit(
+            toks_dev, fin_dev = _sampler_health_jit(
                 self.cfg.vocab_size, float(self.temperature), True)(
-                    logits[:, -1], key_arr))
+                    logits[:, -1], key_arr)
+            toks, fin = jax.device_get((toks_dev, fin_dev))
+            toks, fin = np.asarray(toks), np.asarray(fin)
         else:
             logits = jax.block_until_ready(logits)
+            fin = np.asarray(jnp.all(jnp.isfinite(
+                logits[:, -1, : self.cfg.vocab_size]), axis=-1))
         dt = time.monotonic() - t0
         self.stats.append(StepStat(
             "decode", self.step_idx, dt, tokens=len(active),
@@ -808,6 +1195,13 @@ class ServeScheduler(_ServeBase):
         for i, r in enumerate(self.slots[:bucket]):
             if r is None:
                 continue   # vacant bucket row: computed, masked out here
+            if not fin[i]:
+                # poisoned row: fail + evict + blank THIS request only;
+                # survivors' rows were computed row-independently and are
+                # committed above bit-identically to a fault-free step
+                self._fail(r, f"poisoned:step{self.step_idx}",
+                           poisoned=True)
+                continue
             tok = (int(toks[i]) if toks is not None
                    else self._sample_one(logits[i, -1], r))
             r.tokens.append(tok)
@@ -820,9 +1214,9 @@ class ServeScheduler(_ServeBase):
     # -------------------------------------------------------------- drive --
 
     def step(self) -> List[Tuple[Request, int]]:
-        """One scheduler tick: evictions happened at the end of the previous
-        tick, so admit into the freed slots, then decode one token for every
-        resident sequence."""
+        """One scheduler tick: enforce deadlines, admit into freed slots,
+        then decode one token for every resident sequence."""
+        self._shed_expired(self._clock())
         self.admit()
         out = self.decode_step()
         self.step_idx += 1
@@ -859,7 +1253,16 @@ class ServeScheduler(_ServeBase):
             [r.first_token_s for r in reqs if r.first_token_s is not None])
         out["requests"] = {"finished": len(self.finished),
                            "queued": len(self.queue),
-                           "active": len(self.active)}
+                           "active": len(self.active),
+                           "failed": len(self.failed),
+                           "shed": len(self.shed),
+                           "retries": sum(r.retries for r in
+                                          self.finished + self.failed
+                                          + self.active)}
+        out["health"]["failed"] = [
+            {"uid": r.uid, "reason": r.fail_reason} for r in self.failed]
+        out["health"]["shed"] = [
+            {"uid": r.uid, "reason": r.fail_reason} for r in self.shed]
         out["batch_buckets"] = sorted(self.batch_buckets)
         if self.two_phase:
             out["nnzb_buckets"] = sorted(

@@ -461,6 +461,27 @@ def _decode_block_attn(kind, p, x, cfg, cache, pos, dtype, moe_fn=None):
     return apply_block(kind, p, x, cfg, cache=cache, pos=pos, moe_fn=moe_fn)
 
 
+def blank_cache_row(cache, row: int):
+    """Reset one batch row of a stacked decode cache to its freshly
+    initialised state: zeros everywhere except quantization scale leaves
+    (``k_scale``/``v_scale``), which reset to 1.0 -- the all-zero
+    convention of ``precision.quantize_rows``, matching ``init_cache``.
+
+    The eviction half of the slot contract in :func:`init_cache`: a
+    scheduler that fails a poisoned request scatter-blanks its row so
+    stale NaN/Inf state cannot leak into a later prefill-refill, with zero
+    effect on neighbouring rows."""
+
+    def blank(path, a):
+        if a.ndim < 2:
+            return a
+        fill = (jnp.ones if path and getattr(path[-1], "key", None)
+                in ("k_scale", "v_scale") else jnp.zeros)
+        return a.at[:, row].set(fill(a.shape[2:], a.dtype))
+
+    return jax.tree_util.tree_map_with_path(blank, cache)
+
+
 def cache_capacity(cache, *, ring_window: Optional[int] = None) -> Optional[int]:
     """Static sequence capacity of a decode cache: the minimum cache length
     over its full (non-ring) attention slots, or None for cache-free /

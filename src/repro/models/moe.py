@@ -318,6 +318,15 @@ def _build_routed_stream(flat_slot, S: int, E: int, C: int, bm: int,
     fs = np.asarray(flat_slot)
     B = fs.shape[0]
     M, Mp, Sp, gm, gn = _dispatch_grid(S, E, C, bm, bk)
+    if fs.size and (fs.min() < 0 or fs.max() > M):
+        # Negative slots would silently wrap through numpy fancy indexing
+        # into a *valid-looking* but corrupt stream; out-of-range positives
+        # likewise.  A routed slot is in [0, M) or == M (dropped), full stop.
+        raise ValueError(
+            f"_build_routed_stream: flat_slot out of range "
+            f"[{int(fs.min())}, {int(fs.max())}] vs dispatch grid M={M} "
+            f"(corrupt routing output -- non-finite logits or a poisoned "
+            f"occupancy cache upstream?)")
     b_idx, s_idx = np.nonzero(fs < M)        # kept tokens (dropped = M)
     slots = fs[b_idx, s_idx]
     keys = (slots // bm).astype(np.int64) * gn + s_idx // bk

@@ -79,7 +79,7 @@ def serve_results():
         from benchmarks import bench_serve
     finally:
         sys.path.pop(0)
-    return bench_serve.run(smoke=True)
+    return bench_serve.run(smoke=True, fault_rate=0.5)
 
 
 def test_bench_serve_smoke(serve_results):
@@ -170,6 +170,21 @@ def test_bench_precision_smoke(precision_results):
     assert serving["int8"]["tokens_match_frac"] == 1.0
     for name in ("fp8_e4m3", "fp8_e5m2", "int8"):
         assert serving[name]["first_decode_logit_rel_err"] < 0.2
+
+
+def test_bench_serve_fault_ab(serve_results):
+    """The healthy-vs-faulty A/B row (PR 10): the faulty run drains under a
+    seeded random fault plan, every request reaches a terminal state, and
+    surviving requests emit tokens bit-identical to the healthy pipelined
+    run (per-request isolation)."""
+    for backend in ("gather", "bcsr"):
+        fl = serve_results[backend]["fault"]
+        assert fl["fault_rate"] == 0.5
+        assert fl["faults_injected"] > 0
+        assert fl["survivor_tokens_match"] is True
+        n_req = serve_results[backend]["trace"]["requests"]
+        assert fl["finished"] + fl["failed"] + fl["shed"] == n_req
+        assert fl["faulty_tok_per_s"] > 0
 
 
 def test_bench_serve_signature_bound(serve_results):
